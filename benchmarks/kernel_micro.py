@@ -1,0 +1,46 @@
+"""Kernel microbenchmarks: jnp oracle vs Pallas(interpret) wall time on CPU
+(correctness-path timing only — TPU timing requires hardware), plus the
+compute-skip ratio the block-sparse dW kernel achieves by construction."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.masked_dw import block_sparse_dw_kernel
+
+
+def _time(fn, *args, n=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run() -> list[tuple]:
+    rows = []
+    m, k, n, block = 512, 256, 512, 64
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(m, k)), jnp.float32)
+    dy = jnp.asarray(np.random.default_rng(1).normal(size=(m, n)), jnp.float32)
+    for ratio in (0.125, 0.25, 0.5, 1.0):
+        n_sel = max(1, int(n // block * ratio))
+        idx = jnp.arange(n_sel, dtype=jnp.int32)
+        jr = jax.jit(lambda x, dy, idx: ref.block_sparse_dw_ref(x, dy, idx, block))
+        t_ref = _time(jr, x, dy, idx)
+        flops_skip = 1.0 - n_sel / (n // block)
+        rows.append((f"kernel/masked_dw_r{ratio}", t_ref,
+                     f"jnp_oracle;compute_skipped={flops_skip:.0%}"))
+    # dense dW for comparison
+    jd = jax.jit(lambda x, dy: jnp.einsum("mk,mn->kn", x, dy))
+    rows.append(("kernel/dense_dw", _time(jd, x, dy), "baseline"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,37 @@
+"""Paper's 98%-feature-memory claim, scaled: per-device training extra
+memory (activations + grads + opt state) for dense vs DGSU across the
+full-size assigned archs, from the analytic memory model (validated against
+the dry-run's memory_analysis; see EXPERIMENTS.md §Dry-run caveats)."""
+from __future__ import annotations
+
+import time
+
+from repro.configs import ARCH_IDS, SHAPES, SparseUpdateConfig, get_config
+from repro.core import memory as mem
+
+
+def run() -> list[tuple]:
+    rows = []
+    shape = SHAPES["train_4k"]
+    chips = 256
+    for arch in ("llama3-8b", "command-r-35b", "musicgen-medium",
+                 "deepseek-moe-16b"):
+        cfg = get_config(arch)
+        tokens_dev = shape.global_batch * shape.seq_len // chips
+        sp = SparseUpdateConfig(update_ratio=0.2, channel_block=128)
+        from repro.models.transformer import segment_layout
+        total = sum(s.steps for s in segment_layout(cfg))
+        k = max(1, total // 4)
+        t0 = time.perf_counter()
+        sparse = mem.training_extra_bytes(cfg, sp, k, tokens_dev)
+        dense = mem.dense_training_extra_bytes(cfg, tokens_dev)
+        dt = (time.perf_counter() - t0) * 1e6
+        rows.append((f"memory/{arch}", dt,
+                     f"sparse={sparse/2**20:.1f}MiB;dense={dense/2**20:.1f}MiB;"
+                     f"saving={1 - sparse/dense:.2%}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,224 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch x shape) cell, TPU v5e constants:
+
+    compute    = FLOPs_per_device / 197e12          (bf16 MXU peak)
+    memory     = HBM_bytes_per_device / 819e9
+    collective = collective_bytes_per_device / 50e9 (per-link ICI)
+
+FLOPs source: XLA cost_analysis counts while bodies ONCE (verified —
+launch/hlo_analysis docstring), so the compute/memory terms use the
+ANALYTIC per-step model (6·N_active·D for train + attention/recompute
+terms), which tests/test_roofline.py validates against unrolled HLO on
+small configs. Collective bytes ARE trip-count-corrected from the
+partitioned HLO (launch/hlo_analysis.collective_bytes).
+
+Memory-bytes caveat: the CPU dry-run backend upcasts bf16 while-carries to
+f32 and double-buffers loop state, inflating 'bytes accessed' ~2x vs TPU;
+the analytic bytes model is used for the memory term, with the HLO number
+reported alongside.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+from dataclasses import dataclass
+
+from repro.configs import SHAPES, cell_is_skipped, get_config
+from repro.models import transformer as T
+from repro.models.registry import param_count
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes/s / chip
+LINK_BW = 50e9            # bytes/s / ICI link
+CHIPS_SINGLE = 256
+
+
+# ---------------------------------------------------------------------------
+# analytic per-device FLOPs / bytes
+# ---------------------------------------------------------------------------
+
+def _attn_flops(cfg, seq: int, tokens: int, causal: bool = True) -> float:
+    """Score+PV matmul FLOPs for all layers over `tokens` tokens."""
+    if cfg.family == "ssm":
+        # rwkv wkv: per token per head: 2 * D*D mults for S update + out
+        hd = cfg.rwkv.head_dim
+        h = cfg.d_model // hd
+        return cfg.num_layers * tokens * h * hd * hd * 4.0
+    hd = cfg.resolved_head_dim
+    n_attn = cfg.num_layers
+    local_frac = 0.0
+    window = 0
+    if cfg.attn_pattern.startswith("local_global"):
+        _, l, g = cfg.attn_pattern.split(":")
+        local_frac = int(l) / (int(l) + int(g))
+        window = cfg.sliding_window
+    if cfg.attn_every:
+        n_attn = cfg.num_layers // cfg.attn_every
+    eff_k_full = seq / 2 if causal else seq
+    eff_k_local = min(window, seq) if window else eff_k_full
+    per_tok = 4.0 * cfg.num_heads * hd  # qk + pv, x2 for mult-add
+    full_layers = n_attn * (1 - local_frac)
+    local_layers = n_attn * local_frac
+    return tokens * per_tok * (full_layers * eff_k_full +
+                               local_layers * eff_k_local)
+
+
+def analytic_cell(arch: str, shape_name: str, chips: int = CHIPS_SINGLE,
+                  trainable_fraction: float = 0.25,
+                  update_ratio: float = 0.2) -> dict:
+    """Per-device analytic FLOPs and HBM bytes for one step of the cell."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = param_count(cfg, active_only=True)
+    n_total = param_count(cfg)
+
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        # forward everywhere; backward(dx+dw) over the trainable suffix with
+        # remat (+1 recompute fwd); dW skipped outside selected blocks.
+        fwd = 2.0 * n_active * tokens
+        bwd_dx = 2.0 * n_active * tokens * trainable_fraction
+        bwd_dw = 2.0 * n_active * tokens * trainable_fraction * update_ratio
+        remat = 2.0 * n_active * tokens * trainable_fraction
+        attn = _attn_flops(cfg, shape.seq_len, tokens) * (
+            1.0 + 3.0 * trainable_fraction)   # fwd + (remat+dq/dk/dv) on suffix
+        flops = fwd + bwd_dx + bwd_dw + remat + attn
+        # HBM: params read (fwd + trainable bwd), activations save+read,
+        # grads write+read
+        bytes_ = (n_total * 2 * (1 + trainable_fraction)
+                  + tokens * cfg.d_model * 2 * 3 * _depth(cfg) * trainable_fraction
+                  + n_total * trainable_fraction * update_ratio * 2 * 2)
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        flops = 2.0 * n_active * tokens + _attn_flops(cfg, shape.seq_len, tokens)
+        bytes_ = n_total * 2 + tokens * cfg.d_model * 2 * 4
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        flops = 2.0 * n_active * tokens + _attn_flops(
+            cfg, shape.seq_len, tokens, causal=False)
+        # decode is memory-bound: read all params + the whole KV cache
+        bytes_ = n_total * 2 + _cache_bytes(cfg, shape) + tokens * cfg.d_model * 2
+    return {
+        "flops_per_device": flops / chips,
+        "bytes_per_device": bytes_ / chips,
+        "model_flops": (6.0 if shape.kind == "train" else 2.0) * n_active * tokens,
+        "tokens": tokens,
+    }
+
+
+def _depth(cfg) -> int:
+    return cfg.num_layers
+
+
+def _cache_bytes(cfg, shape) -> float:
+    if cfg.family == "ssm":
+        hd = cfg.rwkv.head_dim
+        h = cfg.d_model // hd
+        return cfg.num_layers * shape.global_batch * h * hd * hd * 4
+    hd = cfg.resolved_head_dim
+    n_attn = cfg.num_layers
+    window_frac, window = 0.0, 0
+    if cfg.attn_pattern.startswith("local_global"):
+        _, l, g = cfg.attn_pattern.split(":")
+        window_frac = int(l) / (int(l) + int(g))
+        window = cfg.sliding_window
+    if cfg.attn_every:
+        n_attn = cfg.num_layers // cfg.attn_every
+        ssm_bytes = (cfg.num_layers - n_attn) * shape.global_batch * \
+            cfg.ssm.expand * cfg.d_model * cfg.ssm.d_state * 4
+    else:
+        ssm_bytes = 0.0
+    full = n_attn * (1 - window_frac) * shape.seq_len
+    local = n_attn * window_frac * min(window or shape.seq_len, shape.seq_len)
+    return (full + local) * shape.global_batch * cfg.num_kv_heads * hd * 2 * 2 \
+        + ssm_bytes
+
+
+# ---------------------------------------------------------------------------
+# table builder
+# ---------------------------------------------------------------------------
+
+def load_dryrun(out_dir: str, arch: str, shape: str, mesh: str = "single",
+                mode: str = "sparse") -> dict | None:
+    path = os.path.join(out_dir, f"{arch}__{shape}__{mesh}__{mode}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def roofline_row(arch: str, shape: str, out_dir: str = "experiments/dryrun",
+                 mode: str = "sparse") -> dict:
+    skip = cell_is_skipped(arch, shape)
+    if skip:
+        return {"arch": arch, "shape": shape, "status": "SKIP",
+                "skip_reason": skip}
+    rec = load_dryrun(out_dir, arch, shape, "single", mode)
+    if rec is None or rec.get("status") != "OK":
+        return {"arch": arch, "shape": shape, "status": "MISSING"}
+    ana = analytic_cell(arch, shape)
+    t_compute = ana["flops_per_device"] / PEAK_FLOPS
+    t_memory = ana["bytes_per_device"] / HBM_BW
+    wire = rec.get("collective_wire_bytes_per_device")
+    if wire is None:
+        # older records used operand-byte accounting: ring all-reduce moves
+        # ~2x its operand on the wire; other ops ~1x.
+        by = rec.get("collective_bytes_by_op", {})
+        ar = by.get("all-reduce", 0)
+        wire = rec["collective_bytes_per_device"] + ar
+    t_coll = wire / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    step_time = max(terms.values())
+    mfu = (ana["model_flops"] / CHIPS_SINGLE / PEAK_FLOPS) / step_time
+    return {
+        "arch": arch, "shape": shape, "status": "OK",
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "bottleneck": bottleneck,
+        "model_flops": ana["model_flops"],
+        "hlo_flops_body_once_per_dev": rec["hlo_flops_body_once"],
+        "analytic_flops_per_dev": ana["flops_per_device"],
+        "useful_ratio": ana["model_flops"] / CHIPS_SINGLE /
+        max(ana["flops_per_device"], 1),
+        "roofline_fraction": mfu,
+        "temp_bytes_dev": rec["memory"]["temp_size_in_bytes"],
+        "arg_bytes_dev": rec["memory"]["argument_size_in_bytes"],
+        "collective_by_op": rec.get("collective_bytes_by_op", {}),
+    }
+
+
+def full_table(out_dir: str = "experiments/dryrun", mode: str = "sparse"):
+    from repro.configs import ARCH_IDS
+    rows = []
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            rows.append(roofline_row(arch, shape, out_dir, mode))
+    return rows
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--mode", default="sparse")
+    args = ap.parse_args()
+    rows = full_table(args.out, args.mode)
+    hdr = (f"{'arch':24s} {'shape':12s} {'comp(ms)':>9s} {'mem(ms)':>9s} "
+           f"{'coll(ms)':>9s} {'bound':>10s} {'MFU':>6s} {'useful':>7s}")
+    print(hdr)
+    for r in rows:
+        if r["status"] != "OK":
+            print(f"{r['arch']:24s} {r['shape']:12s} {r['status']}"
+                  + (f" ({r.get('skip_reason','')})" if r["status"] == "SKIP" else ""))
+            continue
+        print(f"{r['arch']:24s} {r['shape']:12s} "
+              f"{1e3*r['t_compute_s']:9.2f} {1e3*r['t_memory_s']:9.2f} "
+              f"{1e3*r['t_collective_s']:9.2f} {r['bottleneck']:>10s} "
+              f"{r['roofline_fraction']:6.1%} {r['useful_ratio']:7.2f}")
+
+
+if __name__ == "__main__":
+    main()

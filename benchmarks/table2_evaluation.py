@@ -1,0 +1,162 @@
+"""Paper Table II analogue: No-FT / Last / Full / Fixed / Dynamic on the
+synthetic MobileNetV2 transfer task, with the memory model's 'extra memory'
+column.
+
+The paper's numbers (CIFAR-10, 256KB): 36.83 / 59.34 / 90.33 / 84.3 / 85.77.
+We validate the ORDERING and the memory ratios, not ImageNet absolutes
+(no datasets ship offline; DESIGN.md §8.5).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import OptimizerConfig, SparseUpdateConfig
+from repro.configs.mobilenetv2_cifar import smoke_config
+from repro.core.act_prune import make_act_pruner
+from repro.data.synthetic import TransferTask
+from repro.models import mobilenet_v2 as MN
+from repro.optim import apply_updates, init_opt_state
+
+STEPS = 120
+BATCH = 32
+EVAL_BATCHES = 6
+# 3-phase schedule (paper: 10/20/20 epochs -> steps here)
+PHASE_J, PHASE_K = 30, 60
+UPDATE_RATIO = 0.2
+LAST_K_CONVS = 6
+BLOCK = 4
+
+
+def _eval(cfg, task, p, n=EVAL_BATCHES):
+    accs = []
+    for s in range(n):
+        b = task.batch(64, 10_000 + s, "target")
+        _, m = MN.loss_fn(cfg, (None, p), {
+            "images": jnp.asarray(b["images"]),
+            "labels": jnp.asarray(b["labels"])})
+        accs.append(float(m["acc"]))
+    return float(np.mean(accs))
+
+
+def _pretrain(cfg, task, steps=150):
+    """Stand-in for ImageNet pretraining: train on the 'pretrain' domain."""
+    p = MN.init_params(cfg, jax.random.PRNGKey(0))
+    oc = OptimizerConfig(kind="momentum", momentum=0.9, learning_rate=0.05,
+                         warmup_steps=10, decay_steps=steps)
+    st = init_opt_state(oc, p)
+    grad = jax.jit(jax.value_and_grad(
+        lambda p, b: MN.loss_fn(cfg, (None, p), b)[0]))
+    upd = jax.jit(lambda p, g, s, t: apply_updates(oc, p, g, s, t))
+    for step in range(steps):
+        b = task.batch(BATCH, step, "pretrain")
+        _, g = grad(p, {"images": jnp.asarray(b["images"]),
+                        "labels": jnp.asarray(b["labels"])})
+        p, st = upd(p, g, st, step)
+    return p
+
+
+def _selection(cfg, params, ratio, last_k, key, magnitude=True):
+    """Per-conv output-channel-block selection for the last-K convs."""
+    from repro.core.sparse_update import SelSpec
+    names = MN.conv_layer_names(cfg)[-last_k:]
+    idx, spec = {}, {}
+    for name in names:
+        node = params
+        for part in name.split("/")[:-1]:
+            node = node[part]
+        w = node[name.split("/")[-1]]
+        out = w.shape[-1]
+        block = BLOCK if out % BLOCK == 0 else 1
+        nb = out // block
+        ns = max(1, int(round(ratio * nb)))
+        sp = SelSpec(block=block, n_shards=1, n_sel=ns, n_blocks=nb)
+        spec[name] = sp
+        if magnitude:
+            norms = np.asarray(jnp.abs(w).reshape(-1, nb, block).sum((0, 2)))
+            sel = np.argsort(-norms)[:ns]
+        else:
+            sel = jax.random.choice(jax.random.fold_in(key, hash(name) % 2**31),
+                                    nb, (ns,), replace=False)
+        idx[name] = jnp.asarray(sel, jnp.int32)[None, :]
+    return idx, spec
+
+
+def _transfer(cfg, task, pretrained, method: str):
+    """Run one Table-II row; returns (acc, extra_memory_bytes)."""
+    lr = 0.01 if method == "full" else 0.03   # full FT needs the smaller lr
+    oc = OptimizerConfig(kind="momentum", momentum=0.9, learning_rate=lr,
+                         warmup_steps=12, decay_steps=STEPS)
+    act_prune = make_act_pruner(0.15, 2)
+    key = jax.random.PRNGKey(7)
+    conv_names = MN.conv_layer_names(cfg)
+
+    if method == "none":
+        return _eval(cfg, task, pretrained), 0
+
+    # frozen/trainable split
+    trainable = {}
+    frozen = dict(pretrained)
+    if method == "last":
+        trainable = {"classifier": pretrained["classifier"]}
+        frozen = {k: v for k, v in pretrained.items() if k != "classifier"}
+    elif method == "full":
+        trainable, frozen = dict(pretrained), None
+    else:  # fixed / dynamic: classifier + last-K convs (GN frozen — paper)
+        keep = set()
+        for n in conv_names[-LAST_K_CONVS:]:
+            keep.add(n.split("/")[0])
+        trainable = {k: pretrained[k] for k in keep | {"classifier"}}
+        frozen = {k: v for k, v in pretrained.items() if k not in trainable}
+
+    idx = spec = None
+    if method in ("fixed", "dynamic"):
+        idx, spec = _selection(cfg, pretrained, UPDATE_RATIO, LAST_K_CONVS, key)
+
+    st = init_opt_state(oc, trainable)
+
+    def loss(tr, batch, idx):
+        sel = (idx, spec) if idx is not None else None   # spec is static
+        return MN.loss_fn(cfg, (frozen, tr), batch, sel=sel,
+                          act_prune=act_prune)[0]
+
+    grad = jax.jit(jax.value_and_grad(loss))
+    upd = jax.jit(lambda p, g, s, t: apply_updates(oc, p, g, s, t))
+    p = trainable
+    for step in range(STEPS):
+        if method == "dynamic" and PHASE_J <= step < PHASE_J + PHASE_K:
+            idx, _ = _selection(cfg, pretrained, UPDATE_RATIO, LAST_K_CONVS,
+                                jax.random.fold_in(key, step), magnitude=False)
+        b = task.batch(BATCH, step, "target")
+        _, g = grad(p, {"images": jnp.asarray(b["images"]),
+                        "labels": jnp.asarray(b["labels"])}, idx)
+        p, st = upd(p, g, st, step)
+
+    merged = dict(frozen or {})
+    merged.update(p)
+    # extra memory = trainable grads (+selected-only for sparse) + momentum
+    n_tr = sum(x.size for x in jax.tree.leaves(p))
+    ratio = UPDATE_RATIO if method in ("fixed", "dynamic") else 1.0
+    extra = int(n_tr * ratio * 4 * 2)
+    return _eval(cfg, task, merged), extra
+
+
+def run() -> list[tuple]:
+    cfg = smoke_config()
+    task = TransferTask(img=cfg.img_size, seed=0)
+    pre = _pretrain(cfg, task)
+    rows = []
+    for method in ("none", "last", "full", "fixed", "dynamic"):
+        t0 = time.perf_counter()
+        acc, extra = _transfer(cfg, task, pre, method)
+        rows.append((f"table2/{method}", (time.perf_counter() - t0) * 1e6,
+                     f"acc={acc:.4f};extra_mem={extra}B"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,32 @@
+"""The paper's own experiment, end to end: MobileNetV2 + GN transfer under a
+memory budget with pruning, block activation pruning, and the 3-phase
+dynamic gradient sparse update (Table II workflow).
+
+    PYTHONPATH=src python examples/edge_cnn_transfer.py [--steps 120]
+
+Pipeline (paper Fig. 1): pretrain (stand-in for ImageNet) -> channel +
+pattern pruning ON THE PRETRAIN DATA -> transfer to the target domain with
+No-FT / Last / Fixed / Dynamic / Full, reporting accuracy + extra memory.
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from benchmarks import table2_evaluation as t2
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    args = ap.parse_args()
+    t2.STEPS = args.steps
+    print("method,acc,extra_memory")
+    for name, _us, derived in t2.run():
+        print(f"{name.split('/')[1]},{derived}")
+    print("\npaper Table II (CIFAR-10): none=36.83 last=59.34 full=90.33 "
+          "fixed=84.30 dynamic=85.77 — validate ORDERING, not absolutes")
+
+
+if __name__ == "__main__":
+    main()

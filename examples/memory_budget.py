@@ -1,0 +1,45 @@
+"""The paper's memory-budget workflow at both scales: give DGSU a hard
+byte budget and let the solver pick how many later layers fit (paper: fit
+the backward pass in 256KB of MCU SRAM; here also: fit a fine-tune in a
+TPU HBM slice).
+
+    PYTHONPATH=src python examples/memory_budget.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import SparseUpdateConfig, get_config, get_smoke_config
+from repro.core import memory as mem
+from repro.models.transformer import segment_layout
+
+
+def show(cfg, tokens_per_device, budgets, label):
+    total = sum(s.steps for s in segment_layout(cfg))
+    print(f"\n{label}: {cfg.name} ({total} scan blocks, "
+          f"{tokens_per_device} tokens/device)")
+    print(f"{'budget':>12s} {'last-K':>7s} {'extra-mem':>12s} {'vs dense':>9s}")
+    dense = mem.dense_training_extra_bytes(cfg, tokens_per_device)
+    for b in budgets:
+        sp = SparseUpdateConfig(update_ratio=0.2, channel_block=128,
+                                memory_budget_bytes=b)
+        k = mem.solve_max_layers(cfg, sp, tokens_per_device)
+        used = mem.training_extra_bytes(cfg, sp, k, tokens_per_device)
+        print(f"{b/2**20:10.1f}MB {k:7d} {used/2**20:10.2f}MB "
+              f"{used/dense:8.1%}")
+
+
+def main():
+    # edge scale: the paper's smoke-size CNN-ish budget on a small LM
+    cfg = get_smoke_config("llama3-8b")
+    show(cfg, tokens_per_device=256, budgets=[256 * 1024, 2**20, 8 * 2**20],
+         label="edge scale (256KB .. 8MB)")
+    # pod scale: llama3-8b full config, per-chip budgets
+    cfg = get_config("llama3-8b")
+    show(cfg, tokens_per_device=4096 * 16,
+         budgets=[2 * 2**30, 4 * 2**30, 8 * 2**30],
+         label="pod scale (2..8 GiB/chip for the backward working set)")
+
+
+if __name__ == "__main__":
+    main()

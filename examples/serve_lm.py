@@ -1,0 +1,23 @@
+"""Batched serving example: prefill + decode slots over a request queue.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch llama3-8b
+    PYTHONPATH=src python examples/serve_lm.py --arch rwkv6-3b   # O(1)-state decode
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import serve as serve_cli
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    args = ap.parse_args()
+    serve_cli.main(["--arch", args.arch, "--smoke", "--requests", "8",
+                    "--batch", "4", "--prompt-len", "24", "--gen-len", "8"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""The paper's contribution: dynamic gradient sparse update.
+
+- sparse_update: sparse matmul (compact dW for selected channel blocks),
+  frozen/trainable layer-stack splitting
+- selection: later-layers-first + constant-ratio channel-block selection,
+  memory-budget solver
+- schedule: Algorithm 1's fixed/dynamic/fixed three-phase schedule
+- memory: per-device training-memory model (the 256KB budget, scaled)
+- pruning: offline channel + pattern pruning (CNN reproduction path)
+- act_prune: ZeBRA block activation pruning
+- distill: vanilla KD
+
+Submodules importing the model zoo are loaded lazily (models import
+core.sparse_update, so eager imports here would cycle).
+"""
+import importlib
+
+from repro.core.sparse_update import (SelSpec, smm, split_stack, merge_stack,
+                                      use_kernels)
+
+_LAZY = {
+    "SelectionPlan": ("repro.core.selection", "SelectionPlan"),
+    "build_plan": ("repro.core.selection", "build_plan"),
+    "random_selection": ("repro.core.selection", "random_selection"),
+    "magnitude_selection": ("repro.core.selection", "magnitude_selection"),
+    "selected_fraction": ("repro.core.selection", "selected_fraction"),
+    "phase_of": ("repro.core.schedule", "phase_of"),
+    "maybe_reselect": ("repro.core.schedule", "maybe_reselect"),
+    "coverage_after": ("repro.core.schedule", "coverage_after"),
+    "memory": ("repro.core.memory", None),
+    "act_prune": ("repro.core.act_prune", None),
+    "pruning": ("repro.core.pruning", None),
+    "distill": ("repro.core.distill", None),
+}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        mod_name, attr = _LAZY[name]
+        mod = importlib.import_module(mod_name)
+        return getattr(mod, attr) if attr else mod
+    raise AttributeError(name)

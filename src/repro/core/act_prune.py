@@ -1,0 +1,35 @@
+"""Block activation pruning (ZeBRA [11], paper §III-A.2).
+
+Zero every `block`-wide run of channels whose max |x| is below the
+threshold. Paper settings: block=2, threshold=0.15. The Pallas kernel
+version lives in kernels/block_act_prune.py; this module is the jnp
+implementation (also the kernel's oracle)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax.numpy as jnp
+
+
+def block_act_prune(x, threshold: float = 0.15, block: int = 2):
+    """x: [..., C] -> x with sub-threshold blocks zeroed (C % block == 0)."""
+    c = x.shape[-1]
+    assert c % block == 0, (c, block)
+    xb = x.reshape(x.shape[:-1] + (c // block, block))
+    keep = (jnp.abs(xb).max(axis=-1, keepdims=True) >= threshold)
+    return (xb * keep.astype(x.dtype)).reshape(x.shape)
+
+
+def make_act_pruner(threshold: float = 0.15, block: int = 2, use_kernel: bool = False):
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return partial(kops.block_act_prune, threshold=threshold, block=block)
+    return partial(block_act_prune, threshold=threshold, block=block)
+
+
+def block_sparsity(x, threshold: float = 0.15, block: int = 2) -> jnp.ndarray:
+    """Fraction of zeroed blocks (the paper's activation-sparsity metric)."""
+    c = x.shape[-1]
+    xb = x.reshape(x.shape[:-1] + (c // block, block))
+    pruned = (jnp.abs(xb).max(axis=-1) < threshold)
+    return pruned.mean()

@@ -1,0 +1,25 @@
+"""Vanilla knowledge distillation (paper §IV-D: recover post-pruning
+accuracy before transfer, VanillaKD [15])."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kd_loss(student_logits, teacher_logits, temperature: float = 4.0):
+    """KL(teacher || student) at temperature T, scaled by T^2."""
+    t = temperature
+    sp = jax.nn.log_softmax(student_logits.astype(jnp.float32) / t, axis=-1)
+    tp = jax.nn.softmax(teacher_logits.astype(jnp.float32) / t, axis=-1)
+    return (t * t) * jnp.mean(jnp.sum(tp * (jnp.log(tp + 1e-9) - sp), axis=-1))
+
+
+def combined_kd_loss(student_logits, teacher_logits, labels,
+                     alpha: float = 0.5, temperature: float = 4.0):
+    """alpha * KD + (1-alpha) * CE."""
+    lse = jax.nn.logsumexp(student_logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(student_logits.astype(jnp.float32),
+                               labels[:, None], axis=-1)[:, 0]
+    ce = jnp.mean(lse - gold)
+    return alpha * kd_loss(student_logits, teacher_logits, temperature) + \
+        (1 - alpha) * ce

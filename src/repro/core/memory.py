@@ -1,0 +1,107 @@
+"""Per-device training-memory model — the paper's 256KB budget, scaled.
+
+Estimates the extra memory backprop needs (the paper's "extra memory"
+column in Table II): saved activations for trainable layers + gradient and
+optimizer-state buffers for selected params. Frozen front layers contribute
+nothing (their activations are never saved) — that is the paper's 98%
+feature-memory saving.
+
+The model is analytic (used by the budget solver before any tracing); the
+dry-run's compiled memory_analysis() is the ground truth it is validated
+against (tests/test_memory.py).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig, SparseUpdateConfig
+
+
+def _bytes(dtype: str) -> int:
+    return {"bfloat16": 2, "float32": 4, "float16": 2}[dtype]
+
+
+def activation_bytes_per_layer(cfg: ModelConfig, tokens_per_device: int) -> int:
+    """Saved-for-backward bytes per trainable scan-step under per-layer remat
+    (the scan carry [B,S,d] plus the per-step remat checkpoint)."""
+    d = cfg.d_model
+    by = _bytes(cfg.dtype)
+    per_layer = tokens_per_device * d * by          # carry checkpoint
+    if cfg.family == "hybrid":
+        per_layer *= cfg.attn_every                 # super-block = N sublayers
+    elif cfg.attn_pattern.startswith("local_global"):
+        _, l, g = cfg.attn_pattern.split(":")
+        per_layer *= int(l) + int(g)
+    return per_layer
+
+
+def trainable_param_bytes(cfg: ModelConfig, sp: SparseUpdateConfig,
+                          k_steps: int) -> dict:
+    """Gradient + optimizer-state bytes for last-k_steps trainable layers
+    with channel ratio r (selected blocks only are optimizer-tracked)."""
+    from repro.models.registry import abstract_params
+    from repro.models import transformer as T
+
+    abs_params = abstract_params(cfg)
+    segs = T.segment_layout(cfg)
+    by = _bytes(cfg.dtype)
+    remaining = k_steps
+    grad_full = 0
+    grad_sel = 0
+    for seg in reversed(segs):
+        take = min(seg.steps, remaining)
+        remaining -= take
+        if take == 0:
+            continue
+        stack = abs_params["segments"][seg.name]
+        per_step = sum(x.size for x in jax.tree.leaves(stack)) // seg.steps
+        grad_full += per_step * take
+        grad_sel += int(per_step * take * sp.update_ratio)
+    return {
+        "grad_bytes_full": grad_full * by,
+        "grad_bytes_selected": grad_sel * by,
+        "opt_bytes_selected": grad_sel * by,   # 1x for momentum; 0 for sgd
+    }
+
+
+def training_extra_bytes(cfg: ModelConfig, sp: SparseUpdateConfig,
+                         k_steps: int, tokens_per_device: int,
+                         optimizer_slots: int = 0) -> int:
+    """The paper's 'extra memory' for one update iteration."""
+    act = activation_bytes_per_layer(cfg, tokens_per_device) * k_steps
+    tp = trainable_param_bytes(cfg, sp, k_steps)
+    grads = tp["grad_bytes_selected"]
+    opt = tp["opt_bytes_selected"] * optimizer_slots
+    return act + grads + opt
+
+
+def dense_training_extra_bytes(cfg: ModelConfig, tokens_per_device: int,
+                               optimizer_slots: int = 1) -> int:
+    """Baseline: full fine-tune (all layers, dense grads)."""
+    from repro.models.registry import abstract_params
+    segs_total = sum(s.steps for s in __import__(
+        "repro.models.transformer", fromlist=["segment_layout"]
+    ).segment_layout(cfg))
+    n_params = sum(x.size for x in jax.tree.leaves(abstract_params(cfg)))
+    by = _bytes(cfg.dtype)
+    act = activation_bytes_per_layer(cfg, tokens_per_device) * segs_total
+    return act + n_params * by * (1 + optimizer_slots)
+
+
+def solve_max_layers(cfg: ModelConfig, sp: SparseUpdateConfig,
+                     tokens_per_device: int, optimizer_slots: int = 0) -> int:
+    """Largest last-K (scan steps) whose extra memory fits sp.memory_budget_bytes
+    — the paper's 'update as many (later) layers as the budget allows'."""
+    from repro.models import transformer as T
+    total = sum(s.steps for s in T.segment_layout(cfg))
+    best = 0
+    for k in range(1, total + 1):
+        if training_extra_bytes(cfg, sp, k, tokens_per_device,
+                                optimizer_slots) <= sp.memory_budget_bytes:
+            best = k
+        else:
+            break
+    return max(best, 1)

@@ -1,0 +1,193 @@
+"""Offline pruning (paper §III-A) for the CNN reproduction path.
+
+1. Dependency-aware channel pruning (DepGraph [9], simplified): the
+   *hidden* channels of each inverted residual form one dependency group
+   (expand-out ∥ depthwise ∥ project-in); groups are scored by mean |w| and
+   pruned with per-layer sparsity set by the layer's mean-|w| rank (higher
+   layers = more sensitive = pruned less — paper §III-A.1). Same sparsity
+   for all filters of a layer (the paper's PE-utilization rule).
+
+2. Pattern-based pruning (PatDNN [10]): every 3x3 depthwise kernel keeps a
+   4-entry pattern chosen from a fixed library (best-magnitude match);
+   1x1 convs get unstructured magnitude pruning to the target rate.
+
+Both emit masks (semi-structured zeros) — the paper's skip-zero hardware is
+an ASIC concern; memory/FLOP savings are reported analytically
+(benchmarks/pruning_table.py). Applied on the *pre-training* distribution,
+never the target dataset (the paper's realism argument).
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# PatDNN-style 4-entry patterns for 3x3 kernels (center always kept)
+_PATTERNS = np.array([
+    [0, 1, 3, 4], [1, 2, 4, 5], [3, 4, 6, 7], [4, 5, 7, 8],
+    [0, 2, 4, 6], [2, 4, 6, 8], [0, 4, 6, 8], [0, 2, 4, 8],
+    [1, 3, 4, 5], [3, 4, 5, 7],
+])
+
+
+def channel_group_scores(params, cfg) -> dict[str, np.ndarray]:
+    """Mean |w| per hidden-channel group for each inverted-residual block."""
+    scores = {}
+    idx = 0
+    for t, c, n, s in cfg.inverted_residual_setting:
+        for i in range(n):
+            base = f"b{idx}"
+            blk = params[base]
+            group = np.abs(np.asarray(blk["dw"]["w"], np.float32)).mean((0, 1, 2))
+            if "expand" in blk:
+                group = group + np.abs(np.asarray(blk["expand"]["w"],
+                                                  np.float32)).mean((0, 1, 2))
+            group = group + np.abs(np.asarray(blk["project"]["w"],
+                                              np.float32)).mean((0, 1)).mean(-1)
+            scores[base] = group
+            idx += 1
+    return scores
+
+
+def layer_sparsity_targets(params, cfg, global_target: float) -> dict[str, float]:
+    """Per-layer sparsity from mean-|w| rank: larger mean |w| (more
+    sensitive, typically later layers) -> pruned less (paper §III-A.1)."""
+    means = {}
+    idx = 0
+    for t, c, n, s in cfg.inverted_residual_setting:
+        for i in range(n):
+            base = f"b{idx}"
+            means[base] = float(np.abs(np.asarray(
+                params[base]["dw"]["w"], np.float32)).mean())
+            idx += 1
+    order = sorted(means, key=means.get)          # low mean first = prune more
+    n_l = len(order)
+    targets = {}
+    for rank, name in enumerate(order):
+        # linear ramp around the global target: [1.3t .. 0.7t]
+        targets[name] = float(np.clip(
+            global_target * (1.3 - 0.6 * rank / max(1, n_l - 1)), 0.0, 0.95))
+    return targets
+
+
+def channel_prune_masks(params, cfg, global_target: float = 0.4) -> dict:
+    """Channel masks per block (1=keep), dependency-consistent across the
+    expand/dw/project group."""
+    scores = channel_group_scores(params, cfg)
+    targets = layer_sparsity_targets(params, cfg, global_target)
+    masks = {}
+    for base, s in scores.items():
+        n = s.shape[0]
+        n_prune = int(n * targets[base])
+        keep = np.ones(n, bool)
+        if n_prune > 0:
+            drop = np.argsort(s)[:n_prune]
+            keep[drop] = False
+        masks[base] = jnp.asarray(keep)
+    return masks
+
+
+def apply_channel_masks(params, masks) -> Any:
+    """Zero the pruned hidden channels consistently across the group."""
+    params = jax.tree.map(lambda x: x, params)  # copy
+    for base, keep in masks.items():
+        blk = dict(params[base])
+        k = keep.astype(params[base]["dw"]["w"].dtype)
+        if "expand" in blk:
+            e = dict(blk["expand"]); e["w"] = blk["expand"]["w"] * k
+            blk["expand"] = e
+        d = dict(blk["dw"]); d["w"] = blk["dw"]["w"] * k
+        blk["dw"] = d
+        pmask = k[:, None]
+        pr = dict(blk["project"]); pr["w"] = blk["project"]["w"] * pmask
+        blk["project"] = pr
+        params[base] = blk
+    return params
+
+
+def pattern_prune_kernel(w) -> jnp.ndarray:
+    """w: [3,3,I,O] -> mask keeping the best 4-entry pattern per (i,o)."""
+    flat = np.abs(np.asarray(w, np.float32)).reshape(9, -1)    # [9, I*O]
+    pat_sums = np.stack([flat[p].sum(0) for p in _PATTERNS])   # [P, I*O]
+    best = pat_sums.argmax(0)                                  # [I*O]
+    mask = np.zeros((9, flat.shape[1]), np.float32)
+    for pi, p in enumerate(_PATTERNS):
+        cols = best == pi
+        mask[np.ix_(p, np.where(cols)[0])] = 1.0
+    return jnp.asarray(mask.reshape(w.shape))
+
+
+def unstructured_prune(w, rate: float) -> jnp.ndarray:
+    flat = np.abs(np.asarray(w, np.float32)).ravel()
+    k = int(len(flat) * rate)
+    if k == 0:
+        return jnp.ones_like(w)
+    thr = np.partition(flat, k)[k]
+    return jnp.asarray((np.abs(np.asarray(w)) >= thr).astype(np.float32))
+
+
+def full_prune(params, cfg, channel_target: float = 0.4,
+               pattern: bool = True, unstructured_rate: float = 0.5):
+    """Channel + pattern pruning pipeline. Returns (pruned_params, report)."""
+    masks = channel_prune_masks(params, cfg, channel_target)
+    pruned = apply_channel_masks(params, masks)
+    report = {}
+    total, zeros = 0, 0
+    idx = 0
+    for t, c, n, s in cfg.inverted_residual_setting:
+        for i in range(n):
+            base = f"b{idx}"
+            blk = dict(pruned[base])
+            if pattern:
+                d = dict(blk["dw"])
+                d["w"] = d["w"] * pattern_prune_kernel(d["w"])
+                blk["dw"] = d
+            if unstructured_rate > 0:
+                for key in ("expand", "project"):
+                    if key in blk:
+                        e = dict(blk[key])
+                        e["w"] = e["w"] * unstructured_prune(e["w"],
+                                                             unstructured_rate)
+                        blk[key] = e
+            pruned[base] = blk
+            idx += 1
+    for name in list(pruned):
+        if not name.startswith("b"):
+            continue
+        for sub in pruned[name].values():
+            if isinstance(sub, dict) and "w" in sub:
+                w = np.asarray(sub["w"])
+                total += w.size
+                zeros += int((w == 0).sum())
+    report["conv_sparsity"] = zeros / max(total, 1)
+    report["params_before"] = total
+    report["params_after_nonzero"] = total - zeros
+    return pruned, report
+
+
+def conv_flops(cfg, img: int) -> float:
+    """Analytic MAC count of MobileNetV2 at resolution img (for the paper's
+    FLOP-reduction table)."""
+    from repro.models.mobilenet_v2 import _make_divisible
+    wm = cfg.width_mult
+    flops = 0.0
+    res = img // 2
+    c_prev = _make_divisible(cfg.stem_channels * wm)
+    flops += (img // 2) ** 2 * 9 * 3 * c_prev
+    for t, c, n, s in cfg.inverted_residual_setting:
+        c_out = _make_divisible(c * wm)
+        for i in range(n):
+            stride = s if i == 0 else 1
+            hidden = c_prev * t
+            out_res = res // stride
+            if t != 1:
+                flops += res ** 2 * c_prev * hidden
+            flops += out_res ** 2 * 9 * hidden
+            flops += out_res ** 2 * hidden * c_out
+            res, c_prev = out_res, c_out
+    c_head = _make_divisible(cfg.head_channels * max(1.0, wm))
+    flops += res ** 2 * c_prev * c_head
+    return 2.0 * flops

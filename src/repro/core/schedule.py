@@ -1,0 +1,72 @@
+"""Algorithm 1 — the three-phase dynamic gradient sparse update schedule.
+
+    phase 0 (steps [0, j)):        fixed selection (model still adapting;
+                                   re-randomizing would not help — paper)
+    phase 1 (steps [j, j+k)):      DYNAMIC: re-randomize the channel blocks
+                                   every iteration, traversing most of the
+                                   update layers' parameters over time
+    phase 2 (steps [j+k, j+k+l)):  fixed again (convergence fine-tuning)
+
+The selection indices are data, so phase transitions cost nothing and the
+same compiled train_step serves all three phases.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SparseUpdateConfig
+from repro.core.selection import SelectionPlan, random_selection
+
+
+def phase_of(step: int, sp: SparseUpdateConfig) -> int:
+    if step < sp.phase_fixed_early:
+        return 0
+    if step < sp.phase_fixed_early + sp.phase_dynamic:
+        return 1
+    return 2
+
+
+def maybe_reselect(plan: SelectionPlan, sp: SparseUpdateConfig, sel_idx,
+                   step, key):
+    """Jit-friendly: returns the selection for `step` — a fresh random
+    selection inside the dynamic window, the incoming one otherwise."""
+    in_dynamic = jnp.logical_and(step >= sp.phase_fixed_early,
+                                 step < sp.phase_fixed_early + sp.phase_dynamic)
+    fresh = random_selection(plan, key)
+
+    def pick(old, new):
+        if old is None:
+            return None
+        return jnp.where(in_dynamic, new, old)
+
+    return jax.tree.map(pick, sel_idx, fresh,
+                        is_leaf=lambda x: x is None)
+
+
+def coverage_after(plan: SelectionPlan, sp: SparseUpdateConfig,
+                   num_steps: int, key) -> float:
+    """Expected fraction of selectable blocks touched at least once after
+    `num_steps` (paper Fig. 4 analogue: dynamic >> fixed coverage).
+
+    Fixed phases touch n_sel/n_blocks once; each dynamic step re-draws."""
+    from repro.core.sparse_update import SelSpec
+    leaves = [l for seg in plan.spec.values()
+              for l in jax.tree_util.tree_leaves(
+                  seg, is_leaf=lambda x: isinstance(x, SelSpec))]
+    if not leaves:
+        return 0.0
+    dyn_steps = max(0, min(num_steps - sp.phase_fixed_early, sp.phase_dynamic))
+    total, covered = 0, 0.0
+    for spc in leaves:
+        nb = spc.n_blocks * spc.n_shards
+        nsel = spc.n_sel * spc.n_shards
+        p_fixed = nsel / nb
+        # P(block touched) = 1 - (1-p)^dyn for dynamic draws, plus the fixed set
+        p_dyn = 1.0 - (1.0 - nsel / nb) ** dyn_steps
+        p = p_fixed + (1 - p_fixed) * p_dyn
+        covered += p * nb
+        total += nb
+    return covered / total

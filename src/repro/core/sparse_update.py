@@ -1,0 +1,268 @@
+"""Dynamic gradient sparse update — the paper's core, as JAX autodiff machinery.
+
+Two mechanisms (paper §III-B):
+
+1. **Layer selection**: only the last-K scan-blocks of the network are
+   trainable. Implemented by splitting the stacked layer params into
+   (frozen-prefix, trainable-suffix); `jax.grad` w.r.t. the suffix only means
+   XLA never materializes backward residuals for the prefix — the paper's
+   "discard the corresponding output features" memory saving.
+
+2. **Channel selection**: within trainable layers, each weight's *output
+   channel blocks* are selected with ratio r. `smm` (sparse matmul) is a
+   drop-in `x @ w` whose custom VJP computes dW **only for the selected
+   blocks** (a compact [K, r·N] matmul instead of [K, N]) and scatters into a
+   zero buffer. dX is always dense (needed to keep propagating). The block
+   granularity (default 128) is the TPU adaptation: MXU-aligned tiles that
+   the Pallas kernel (`repro.kernels.masked_dw`) can skip wholesale.
+
+Selection indices are *data* (int32 arrays), so the dynamic phase of
+Algorithm 1 re-randomizes them every step without recompilation.
+
+Selection layout: for a weight with output dim N sharded over `n_shards` TP
+shards, `idx` has shape [n_shards, n_sel] holding block indices *local to
+each shard* — every shard updates the same number of blocks (the paper's
+equal-sparsity-per-PE rule, reborn as TP load balance).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+_FLAGS = threading.local()
+
+
+class SelSpec(NamedTuple):
+    """Static (trace-time) description of one weight's channel selection."""
+    block: int        # channels per block
+    n_shards: int     # TP shards of the out dim
+    n_sel: int        # selected blocks per shard
+    n_blocks: int     # total blocks per shard
+
+
+@contextlib.contextmanager
+def use_kernels(enabled: bool = True):
+    """Route the compact dW computation through the Pallas kernel."""
+    prev = getattr(_FLAGS, "kernels", False)
+    _FLAGS.kernels = enabled
+    try:
+        yield
+    finally:
+        _FLAGS.kernels = prev
+
+
+def kernels_enabled() -> bool:
+    return getattr(_FLAGS, "kernels", False)
+
+
+@contextlib.contextmanager
+def compact_allreduce(enabled: bool = True):
+    """Gradient compression (beyond-paper, EXPERIMENTS.md §Perf): force the
+    data-parallel reduction of dW onto the COMPACT selected-block tensor.
+
+    A sharding constraint marks dw_sel as replicated across the DP axes, so
+    XLA inserts the cross-data all-reduce there — r x the bytes of the
+    full-shape gradient. The scatter to full shape then runs on already-
+    replicated operands and needs no further collective."""
+    prev = getattr(_FLAGS, "cgr", False)
+    _FLAGS.cgr = enabled
+    try:
+        yield
+    finally:
+        _FLAGS.cgr = prev
+
+
+def compact_allreduce_enabled() -> bool:
+    return getattr(_FLAGS, "cgr", False)
+
+
+def compress_grads(grads_segments: dict, sel_idx: dict, spec_tree: dict,
+                   logical_tree: Optional[dict] = None):
+    """Gradient-compression rewrite (used when compact_allreduce is on):
+
+        dw  ->  scatter(constrain(gather(dw, idx)), idx)
+
+    Selected-block gathers of dw equal dw's only nonzero content, so the
+    rewrite is exact. The constraint marks the COMPACT tensor replicated
+    across the DP axes (while keeping each leaf's natural TP sharding on its
+    other dims, from `logical_tree` = param_logical_specs segments), so XLA
+    places the cross-data all-reduce there — r x the full-gradient bytes
+    (the paper's selected-channels idea applied to the interconnect)."""
+    from repro.sharding import constrain
+
+    def leaf(dw, idx, spec: SelSpec, logical):
+        k_steps = dw.shape[0]
+        lead = dw.shape[:-1]                   # [K(, E), in]
+        dwb = dw.reshape(lead + (spec.n_shards, spec.n_blocks, spec.block))
+        # idx: [K, n_shards, n_sel] -> broadcast into the gather
+        bidx = idx.reshape((k_steps,) + (1,) * (len(lead) - 1)
+                           + (spec.n_shards, spec.n_sel, 1))
+        bidx = jnp.broadcast_to(bidx, lead + (spec.n_shards, spec.n_sel,
+                                              spec.block))
+        dw_sel = jnp.take_along_axis(dwb, bidx, axis=len(lead) + 1)
+        # keep the leaf's natural TP sharding on its non-out dims; the out
+        # dim's TP sharding (if any) rides the n_shards dim.
+        if logical is not None and len(logical) == len(dw.shape):
+            in_axes = tuple(logical[:-1])
+            out_tp = logical[-1] if spec.n_shards > 1 else None
+        else:
+            in_axes = ("layers",) + (None,) * (len(lead) - 1)
+            out_tp = "ff" if spec.n_shards > 1 else None
+        dw_sel = constrain(dw_sel, *in_axes, out_tp, None, None)
+        zeros = jnp.zeros_like(dwb)
+        dw_new = jnp.put_along_axis(zeros, bidx, dw_sel.astype(dw.dtype),
+                                    axis=len(lead) + 1, inplace=False)
+        return dw_new.reshape(dw.shape)
+
+    def walk(g, i, s, lg):
+        if isinstance(s, SelSpec):
+            return leaf(g, i, s, lg)
+        if isinstance(s, dict):
+            return {k: (walk(g[k], i[k], s[k],
+                            (lg or {}).get(k) if isinstance(lg, dict) else None)
+                        if k in s else g[k])
+                    for k in g}
+        return g
+
+    out = {}
+    for seg, g in grads_segments.items():
+        if sel_idx.get(seg) is None or seg not in spec_tree:
+            out[seg] = g
+            continue
+        lg = (logical_tree or {}).get(seg)
+        out[seg] = walk(g, sel_idx[seg], spec_tree[seg], lg)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# sparse matmul
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _smm(x, w, idx, spec: SelSpec):
+    return jnp.matmul(x, w)
+
+
+def _smm_fwd(x, w, idx, spec: SelSpec):
+    return jnp.matmul(x, w), (x, w, idx)
+
+
+def _gather_blocks(dy2, idx, spec: SelSpec):
+    """dy2: [M, N] -> selected blocks [M, n_shards, n_sel, block]."""
+    m = dy2.shape[0]
+    dyb = dy2.reshape(m, spec.n_shards, spec.n_blocks, spec.block)
+    return jnp.take_along_axis(dyb, idx[None, :, :, None], axis=2)
+
+
+def _scatter_blocks(dw_sel, idx, spec: SelSpec, k: int, dtype):
+    """dw_sel: [K, n_shards, n_sel, block] -> full [K, N] with zeros elsewhere."""
+    zeros = jnp.zeros((k, spec.n_shards, spec.n_blocks, spec.block), dtype)
+    full = jnp.put_along_axis(
+        zeros, jnp.broadcast_to(idx[None, :, :, None],
+                                (k, spec.n_shards, spec.n_sel, spec.block)),
+        dw_sel.astype(dtype), axis=2, inplace=False)
+    return full.reshape(k, spec.n_shards * spec.n_blocks * spec.block)
+
+
+def compact_dw(x2, dy2, idx, spec: SelSpec):
+    """The paper's compute skip: dW for selected blocks only.
+
+    x2: [M, K], dy2: [M, N] -> [K, n_shards, n_sel, block]
+    """
+    if kernels_enabled():
+        from repro.kernels import ops as kops
+        return kops.block_sparse_dw(x2, dy2, idx, spec)
+    dy_sel = _gather_blocks(dy2, idx, spec)
+    return jnp.einsum("mk,msnb->ksnb", x2, dy_sel,
+                      preferred_element_type=jnp.float32)
+
+
+def _smm_bwd(spec: SelSpec, res, dy):
+    x, w, idx = res
+    k, n = w.shape[-2], w.shape[-1]
+    dx = jnp.matmul(dy, jnp.swapaxes(w, -1, -2))
+    x2 = x.reshape(-1, k)
+    dy2 = dy.reshape(-1, n)
+    dw_sel = compact_dw(x2, dy2, idx, spec)
+    dw = _scatter_blocks(dw_sel, idx, spec, k, w.dtype)
+    return dx.astype(x.dtype), dw, None
+
+
+_smm.defvjp(_smm_fwd, _smm_bwd)
+
+
+def smm(x, w, sel, name: str):
+    """Sparse matmul: `x @ w` with channel-block-sparse dW.
+
+    sel: None (dense backward) or a pair (idx_dict, spec_dict) where
+    idx_dict[name] is int32 [n_shards, n_sel] and spec_dict[name] a SelSpec.
+    Weights absent from the dicts fall back to dense backward.
+    """
+    if sel is None:
+        return jnp.matmul(x, w)
+    idx_dict, spec_dict = sel
+    if idx_dict is None or name not in idx_dict:
+        return jnp.matmul(x, w)
+    if w.ndim == 2:
+        return _smm(x, w, idx_dict[name], spec_dict[name])
+    return _smm_batched(x, w, idx_dict[name], spec_dict[name])
+
+
+# batched (expert) variant: x [E, C, K], w [E, K, N]
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _smm_batched(x, w, idx, spec: SelSpec):
+    return jnp.einsum("eck,ekn->ecn", x, w)
+
+
+def _smmb_fwd(x, w, idx, spec):
+    return jnp.einsum("eck,ekn->ecn", x, w), (x, w, idx)
+
+
+def _smmb_bwd(spec: SelSpec, res, dy):
+    x, w, idx = res
+    e, c, k = x.shape
+    n = w.shape[-1]
+    dx = jnp.einsum("ecn,ekn->eck", dy, w)
+    dyb = dy.reshape(e, c, spec.n_shards, spec.n_blocks, spec.block)
+    dy_sel = jnp.take_along_axis(dyb, idx[None, None, :, :, None], axis=3)
+    dw_sel = jnp.einsum("eck,ecsnb->eksnb", x, dy_sel,
+                        preferred_element_type=jnp.float32)
+    zeros = jnp.zeros((e, k, spec.n_shards, spec.n_blocks, spec.block), w.dtype)
+    dw = jnp.put_along_axis(
+        zeros, jnp.broadcast_to(idx[None, None, :, :, None],
+                                (e, k, spec.n_shards, spec.n_sel, spec.block)),
+        dw_sel.astype(w.dtype), axis=3, inplace=False).reshape(e, k, n)
+    return dx.astype(x.dtype), dw, None
+
+
+_smm_batched.defvjp(_smmb_fwd, _smmb_bwd)
+
+
+# ---------------------------------------------------------------------------
+# layer-level split (frozen prefix / trainable suffix over scan stacks)
+# ---------------------------------------------------------------------------
+
+def split_stack(stack, n_trainable: int):
+    """Split stacked layer params [L, ...] into (frozen [L-K], trainable [K])."""
+    if n_trainable <= 0:
+        return stack, None
+    frozen = jax.tree.map(lambda a: a[: a.shape[0] - n_trainable], stack)
+    trainable = jax.tree.map(lambda a: a[a.shape[0] - n_trainable:], stack)
+    depth = jax.tree.leaves(stack)[0].shape[0]
+    if n_trainable >= depth:
+        return None, stack
+    return frozen, trainable
+
+
+def merge_stack(frozen, trainable):
+    if frozen is None:
+        return trainable
+    if trainable is None:
+        return frozen
+    return jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0),
+                        frozen, trainable)

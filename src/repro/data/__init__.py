@@ -1,0 +1,4 @@
+from repro.data.synthetic import (lm_batches, transfer_image_batches,
+                                  TransferTask)
+
+__all__ = ["lm_batches", "transfer_image_batches", "TransferTask"]

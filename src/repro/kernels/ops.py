@@ -1,0 +1,53 @@
+"""Jit'd wrappers integrating the Pallas kernels with the framework.
+
+On CPU (no TPU backend) the kernels run in interpret mode — the Pallas body
+executes exactly as it would be staged for TPU, validating index maps and
+block logic. On TPU the same call compiles to Mosaic.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.block_act_prune import block_act_prune_kernel
+from repro.kernels.masked_dw import block_sparse_dw_kernel
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def block_sparse_dw(x2, dy2, idx, spec):
+    """compact_dw kernel entry (see core.sparse_update.compact_dw).
+
+    x2: [M, K], dy2: [M, N], idx: [n_shards, n_sel] ->
+    [K, n_shards, n_sel, block] fp32 (matches the jnp path layout).
+    """
+    n_shards, n_sel = idx.shape
+    m, k = x2.shape
+    n = dy2.shape[1]
+    loc = n // n_shards
+    outs = []
+    for s in range(n_shards):  # dry-run path is jnp; kernel used per device
+        dy_s = dy2[:, s * loc: (s + 1) * loc]
+        out = block_sparse_dw_kernel(x2, dy_s, idx[s], block=spec.block,
+                                     interpret=_interpret())
+        outs.append(out)                          # [n_sel, block, K]
+    stacked = jnp.stack(outs, axis=0)             # [n_shards, n_sel, block, K]
+    return jnp.transpose(stacked, (3, 0, 1, 2))   # [K, n_shards, n_sel, block]
+
+
+def block_act_prune(x, threshold: float = 0.15, block: int = 2):
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    r = x2.shape[0]
+    # pick dividing tiles
+    tr = r if r < 256 else max(d for d in (256, 128, 64, 32, 16, 8, 4, 2, 1)
+                               if r % d == 0)
+    c = shape[-1]
+    tc = c if c < 512 else max(d for d in (512, 256, 128, 64) if c % d == 0)
+    out = block_act_prune_kernel(x2, threshold=threshold, block=block,
+                                 tr=tr, tc=tc, interpret=_interpret())
+    return out.reshape(shape)

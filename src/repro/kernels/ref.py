@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def block_sparse_dw_ref(x, dy, idx, block: int):
+    """x: [M,K], dy: [M,N], idx: [n_sel] -> [n_sel, block, K] fp32."""
+    m, k = x.shape
+    n = dy.shape[1]
+    dyb = dy.reshape(m, n // block, block)
+    dy_sel = jnp.take(dyb, idx, axis=1)                     # [M, n_sel, block]
+    return jnp.einsum("msb,mk->sbk", dy_sel.astype(jnp.float32),
+                      x.astype(jnp.float32))
+
+
+def block_act_prune_ref(x, threshold: float = 0.15, block: int = 2):
+    c = x.shape[-1]
+    xb = x.reshape(x.shape[:-1] + (c // block, block))
+    keep = (jnp.abs(xb).max(axis=-1, keepdims=True) >= threshold)
+    return (xb * keep.astype(x.dtype)).reshape(x.shape)
+
+
+def wkv6_ref(r, k, v, w, u):
+    """Sequential RWKV-6 recurrence oracle (matches models/rwkv6._wkv_chunk
+    semantics): r,k,v,w: [BH, T, D]; u: [D] -> y [BH, T, D] fp32."""
+    import jax
+
+    def step(s, rkvw):
+        rt, kt, vt, wt = rkvw
+        kv = kt[:, :, None] * vt[:, None, :]
+        y = jnp.einsum("bd,bde->be", rt, u[None, :, None] * kv + s)
+        return wt[:, :, None] * s + kv, y
+
+    bh, t, d = r.shape
+    s0 = jnp.zeros((bh, d, d), jnp.float32)
+    xs = tuple(jnp.moveaxis(x.astype(jnp.float32), 1, 0) for x in (r, k, v, w))
+    _, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1)

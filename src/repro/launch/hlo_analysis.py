@@ -1,0 +1,243 @@
+"""Post-SPMD HLO analysis: collective-byte accounting with while-loop
+trip-count multiplication.
+
+`compiled.cost_analysis()` counts while bodies ONCE (verified empirically),
+and our layer stacks are lax.scan loops — so naive summation undercounts
+per-layer collectives by the layer count. This module parses
+`compiled.as_text()` into computations, resolves each while loop's trip
+count from its condition computation (compare-with-constant), and walks the
+call graph from ENTRY multiplying byte counts through the loop nest.
+
+Collectives counted: all-reduce, all-gather, reduce-scatter, all-to-all,
+collective-permute (+ their async -start forms; -done forms are skipped).
+Bytes = sum of operand sizes (the data each device injects into the
+interconnect for that op).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*\{\s*$")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class _Instr:
+    name: str
+    op: str
+    result_bytes: int
+    operands: list[str]
+    body: Optional[str] = None       # while body computation
+    cond: Optional[str] = None       # while condition computation
+    called: list[str] = field(default_factory=list)
+
+
+@dataclass
+class _Computation:
+    name: str
+    instrs: dict[str, _Instr] = field(default_factory=dict)
+    trip_const: Optional[int] = None   # if this is a while condition
+
+
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def _split_type_op(rhs: str):
+    """Split '<type> <op>(<args>...' into (type_str, op, args). Handles
+    tuple types with nested parens/brackets and index comments."""
+    rhs = _COMMENT_RE.sub("", rhs).strip()
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    type_str = rhs[: i + 1]
+                    rest = rhs[i + 1:].strip()
+                    break
+        else:
+            return None
+    else:
+        sp = rhs.find(" ")
+        if sp < 0:
+            return None
+        type_str = rhs[:sp]
+        rest = rhs[sp + 1:].strip()
+    m = re.match(r"([\w\-]+)\((.*)$", rest, re.S)
+    if not m:
+        return None
+    return type_str, m.group(1), m.group(2)
+_CALL_ATTR_RE = re.compile(r"(?:condition|body|to_apply|branch_computations)="
+                           r"\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+_OPERAND_RE = re.compile(r"%?([\w.\-]+)")
+
+
+def parse_hlo(text: str) -> dict[str, _Computation]:
+    comps: dict[str, _Computation] = {}
+    cur: Optional[_Computation] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        if stripped.endswith("{") and ("->" in stripped or stripped.startswith("ENTRY")):
+            m = _COMP_START_RE.match(stripped)
+            name = None
+            if m:
+                name = m.group(1)
+            else:  # e.g. "ENTRY %main.123 (args) -> type {"
+                m2 = re.search(r"%([\w.\-]+)", stripped)
+                name = m2.group(1) if m2 else f"comp{len(comps)}"
+            cur = _Computation(name=name)
+            comps[name] = cur
+            if stripped.startswith("ENTRY"):
+                comps["__entry__"] = cur
+            continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR_RE.match(line)
+        if not mi:
+            continue
+        name, rhs = mi.group(1), mi.group(2)
+        mo = _split_type_op(rhs)
+        if not mo:
+            continue
+        type_str, op, args = mo
+        instr = _Instr(name=name, op=op, result_bytes=_shape_bytes(type_str),
+                       operands=[])
+        # operand names: first段 before any attr like ", dimensions="
+        arg_main = args.split("), ")[0] if op == "while" else args
+        head = re.split(r",\s*(?:channel_id|dimensions|replica_groups|"
+                        r"source_target_pairs|to_apply|condition|body|"
+                        r"sharding|slice|direction|use_global)", args)[0]
+        for om in re.finditer(r"%([\w.\-]+)", head):
+            instr.operands.append(om.group(1))
+        if op == "while":
+            mc = re.search(r"condition=%?([\w.\-]+)", args)
+            mb = re.search(r"body=%?([\w.\-]+)", args)
+            instr.cond = mc.group(1) if mc else None
+            instr.body = mb.group(1) if mb else None
+        else:
+            for cm in _CALL_ATTR_RE.finditer(args):
+                for cname in re.split(r",\s*", cm.group(1)):
+                    instr.called.append(cname.lstrip("%"))
+        if op == "constant":
+            mcst = re.search(r"constant\((-?\d+)\)", rhs)
+            if mcst and cur.trip_const is None:
+                cur.trip_const = int(mcst.group(1))
+        cur.instrs[name] = instr
+    return comps
+
+
+def _trip_count(comps, cond_name: Optional[str]) -> int:
+    """Trip count from a scan-style condition (compare iter < constant)."""
+    if cond_name is None or cond_name not in comps:
+        return 1
+    cond = comps[cond_name]
+    # scan-style condition: compare(iter, constant(N)) direction=LT
+    if cond.trip_const is not None and cond.trip_const > 0:
+        return cond.trip_const
+    return 1
+
+
+def collective_bytes(text: str) -> dict:
+    """Total per-device collective operand bytes, loop-trip corrected.
+
+    Returns {"total": int, "by_op": {op: int}, "naive": int}."""
+    comps = parse_hlo(text)
+    entry = comps.get("__entry__")
+    if entry is None:
+        return {"total": 0, "by_op": {}, "naive": 0}
+
+    by_op: dict[str, float] = {}
+    naive = 0
+
+    def comp_bytes(comp: _Computation, mult: float, seen: tuple) -> float:
+        nonlocal naive
+        if comp.name in seen:            # recursion guard
+            return 0.0
+        total = 0.0
+        for instr in comp.instrs.values():
+            opn = instr.op
+            base = None
+            for c in _COLLECTIVES:
+                if opn == c or opn == c + "-start":
+                    base = c
+                    break
+            if base is not None:
+                b = 0
+                for o in instr.operands:
+                    src = comp.instrs.get(o)
+                    if src is not None:
+                        b += src.result_bytes
+                if b == 0:               # operands unknown -> use result
+                    b = instr.result_bytes
+                # wire bytes per device (ring algorithms):
+                #   all-reduce       ~ 2 x operand  (reduce-scatter + all-gather)
+                #   all-gather       ~ result - operand (received bytes)
+                #   reduce-scatter   ~ operand - result (sent bytes)
+                #   all-to-all       ~ operand     (each device re-sends its shard)
+                #   collective-permute ~ operand
+                if base == "all-reduce":
+                    w = 2 * b
+                elif base == "all-gather":
+                    w = max(instr.result_bytes - b, b)
+                elif base == "reduce-scatter":
+                    w = max(b - instr.result_bytes, instr.result_bytes)
+                else:
+                    w = b
+                total += w * mult
+                naive += w
+                by_op[base] = by_op.get(base, 0.0) + w * mult
+            if instr.op == "while" and instr.body in comps:
+                trips = _trip_count(comps, instr.cond)
+                total += comp_bytes(comps[instr.body], mult * trips,
+                                    seen + (comp.name,))
+            for cal in instr.called:
+                if cal in comps:
+                    total += comp_bytes(comps[cal], mult, seen + (comp.name,))
+        return total
+
+    total = comp_bytes(entry, 1.0, ())
+    return {"total": int(total), "by_op": {k: int(v) for k, v in by_op.items()},
+            "naive": int(naive)}
+
+
+def while_trip_counts(text: str) -> list[int]:
+    comps = parse_hlo(text)
+    out = []
+    for comp in comps.values():
+        for instr in comp.instrs.values():
+            if instr.op == "while":
+                out.append(_trip_count(comps, instr.cond))
+    return out

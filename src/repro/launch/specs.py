@@ -1,0 +1,270 @@
+"""Dry-run plumbing: abstract inputs (ShapeDtypeStruct), sharding trees, and
+step builders for every (arch x shape) cell.
+
+`input_specs()` provides weak-type-correct, shardable stand-ins for every
+model input — no device allocation. Modality frontends ([audio]/[vlm]) are
+stubs: precomputed frame/patch embeddings per the assignment.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ModelConfig, OptimizerConfig, ShapeConfig,
+                                SparseUpdateConfig, TrainConfig)
+from repro.models import decoding as D
+from repro.models import transformer as T
+from repro.models.specs import param_logical_specs
+from repro.sharding import AxisRules, default_rules, seq_sharded_rules, use_rules
+
+
+# ---------------------------------------------------------------------------
+# resolution helpers
+# ---------------------------------------------------------------------------
+
+def resolve_pspec(shape: tuple, logical: tuple, rules: AxisRules) -> P:
+    """Logical axes -> PartitionSpec with divisibility fallback."""
+    out = []
+    for dim, name in zip(shape, logical):
+        axes = rules.rules.get(name) if name else None
+        if axes is None:
+            out.append(None)
+            continue
+        if isinstance(axes, str):
+            axes = (axes,)
+        size = 1
+        for a in axes:
+            size *= rules.mesh.shape[a]
+        out.append(tuple(axes) if dim % size == 0 else None)
+    return P(*out)
+
+
+def tree_shardings(abs_tree, logical_tree, rules: AxisRules):
+    """NamedSharding tree for an abstract tree + logical-axes tree."""
+    def make(leaf, logical):
+        spec = resolve_pspec(leaf.shape, logical, rules)
+        return NamedSharding(rules.mesh, spec)
+    return jax.tree.map(make, abs_tree, logical_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(i, (str, type(None))) for i in x))
+
+
+def _replicated(rules: AxisRules):
+    return NamedSharding(rules.mesh, P())
+
+
+def replicate_tree(tree, rules: AxisRules):
+    return jax.tree.map(lambda _: _replicated(rules), tree)
+
+
+# ---------------------------------------------------------------------------
+# batch input specs
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract batch for the given shape (train/prefill: full seq; decode:
+    one token with positions at cache end)."""
+    b = shape.global_batch
+    s = shape.seq_len if shape.kind != "decode" else 1
+    batch: dict[str, Any] = {}
+    if cfg.embed_inputs:
+        batch["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                               jnp.dtype(cfg.dtype))
+    else:
+        batch["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if shape.kind == "train":
+        batch["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cfg.mrope:
+        batch["positions"] = jax.ShapeDtypeStruct((3, b, s), jnp.int32)
+    elif shape.kind == "decode":
+        batch["positions"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    return batch
+
+
+def batch_shardings(cfg, shape: ShapeConfig, rules: AxisRules) -> dict:
+    batch_axes = rules.rules.get("batch")
+    def spec_for(key, leaf):
+        if key == "positions" and cfg.mrope:
+            return resolve_pspec(leaf.shape, (None, "batch", None), rules)
+        if key == "embeds":
+            return resolve_pspec(leaf.shape, ("batch", None, None), rules)
+        return resolve_pspec(leaf.shape, ("batch",) + (None,) * (len(leaf.shape) - 1),
+                             rules)
+    specs = input_specs(cfg, shape)
+    return {k: NamedSharding(rules.mesh, spec_for(k, v))
+            for k, v in specs.items()}
+
+
+# ---------------------------------------------------------------------------
+# cache specs
+# ---------------------------------------------------------------------------
+
+_CACHE_LOGICAL = {
+    "k": ("layers", "batch", "cache_seq", "kv_heads", None),
+    "v": ("layers", "batch", "cache_seq", "kv_heads", None),
+    "pos": ("layers",),
+    "h": ("layers", "batch", "d_inner", None),
+    "conv": ("layers", "batch", None, "d_inner"),
+    "s": ("layers", "batch", None, None, None),
+    "last": ("layers", "batch", None),
+}
+
+
+def cache_abstract(cfg, shape: ShapeConfig):
+    return jax.eval_shape(
+        lambda: D.init_cache(cfg, shape.global_batch, shape.seq_len))
+
+
+def cache_shardings(cfg, cache_abs, rules: AxisRules):
+    def walk(node):
+        if isinstance(node, dict):
+            return {k: (walk(v) if isinstance(v, dict) else _leaf(k, v))
+                    for k, v in node.items()}
+        return node
+    def _leaf(name, leaf):
+        logical = _CACHE_LOGICAL.get(name)
+        if logical is None or len(logical) != len(leaf.shape):
+            logical = ("layers",) + (None,) * (len(leaf.shape) - 1)
+        return NamedSharding(rules.mesh, resolve_pspec(leaf.shape, logical, rules))
+    return walk(cache_abs)
+
+
+# ---------------------------------------------------------------------------
+# rules per cell
+# ---------------------------------------------------------------------------
+
+def rules_for(mesh: Mesh, cfg: ModelConfig, shape: ShapeConfig) -> AxisRules:
+    """Sharding rules per cell.
+
+    - batch over (pod, data); TP over model.
+    - KV heads replicated (head counts are rarely divisible by 16; the
+      GQA expansion gather keeps per-shard locality — DESIGN §5). The KV
+      *cache* therefore shards its sequence dim over the model axis
+      (flash-decoding style partial softmax), and for long_500k (batch=1)
+      over (data, model) — 256-way sequence sharding of the 500k cache.
+    """
+    if shape.name == "long_500k":
+        r = seq_sharded_rules(mesh)
+    else:
+        r = default_rules(mesh)
+    rules = dict(r.rules)
+    rules["kv_heads"] = None
+    if shape.kind in ("decode", "prefill"):
+        prev = rules.get("cache_seq")
+        prev_axes = (prev,) if isinstance(prev, str) else tuple(prev or ())
+        model = (r.model_axis,) if r.model_axis else ()
+        rules["cache_seq"] = prev_axes + model or None
+    return AxisRules(rules, mesh=r.mesh, batch_axes=r.batch_axes,
+                     model_axis=r.model_axis)
+
+
+# ---------------------------------------------------------------------------
+# step builders (the functions the dry-run lowers)
+# ---------------------------------------------------------------------------
+
+def make_train_cell(cfg: ModelConfig, shape: ShapeConfig, rules: AxisRules,
+                    sparse: Optional[SparseUpdateConfig] = None,
+                    optimizer: Optional[OptimizerConfig] = None):
+    """Returns (step_fn, abstract_state, state_shardings, abstract_batch,
+    batch_shardings) for a training cell."""
+    from repro.train.steps import make_train_state, make_train_step
+
+    sparse = sparse if sparse is not None else SparseUpdateConfig(
+        update_ratio=0.2, num_update_layers=_default_k(cfg), channel_block=128)
+    optimizer = optimizer or OptimizerConfig(kind="sgd", learning_rate=0.01,
+                                             warmup_steps=100, decay_steps=10_000)
+    tc = TrainConfig(model=cfg, shape=shape, sparse=sparse, optimizer=optimizer)
+
+    with use_rules(rules):
+        # abstract state (random selection — magnitude needs real weights)
+        def mk(key):
+            state, _ = make_train_state(tc, key, selection_init="random")
+            return state
+        state_abs = jax.eval_shape(mk, jax.random.PRNGKey(0))
+        # the plan is static metadata — built concretely under the rules
+        from repro.core.selection import build_plan
+        plan = build_plan(cfg, sparse, shape.global_batch * shape.seq_len)
+        step_fn = make_train_step(tc, plan)
+
+    state_sh = state_shardings(cfg, plan, state_abs, rules)
+    batch_abs = input_specs(cfg, shape)
+    batch_sh = batch_shardings(cfg, shape, rules)
+    return step_fn, state_abs, state_sh, batch_abs, batch_sh, plan
+
+
+def _default_k(cfg) -> int:
+    """Default: train the last quarter of scan blocks (the paper's
+    as-many-later-layers-as-fit; budget solving is exercised separately)."""
+    segs = T.segment_layout(cfg)
+    total = sum(s.steps for s in segs)
+    return max(1, total // 4)
+
+
+def state_shardings(cfg, plan, state_abs, rules: AxisRules):
+    logical = param_logical_specs(cfg)
+
+    def shard_params(tree, logical_tree):
+        if tree is None:
+            return None
+        out = {}
+        for k, v in tree.items():
+            if isinstance(v, dict):
+                out[k] = shard_params(v, logical_tree.get(k, {}))
+            else:
+                lg = logical_tree.get(k)
+                if lg is None or len(lg) != len(v.shape):
+                    lg = (None,) * len(v.shape)
+                out[k] = NamedSharding(rules.mesh,
+                                       resolve_pspec(v.shape, lg, rules))
+        return out
+
+    sh = {}
+    sh["step"] = _replicated(rules)
+    sh["rng"] = _replicated(rules)
+    sh["params_trainable"] = shard_params(state_abs["params_trainable"], logical)
+    sh["params_frozen"] = shard_params(state_abs["params_frozen"], logical)
+    opt = state_abs["opt"]
+    sh["opt"] = jax.tree.map(lambda _: None, opt) if not opt else {
+        k: shard_params(v, logical) for k, v in opt.items()}
+    sh["sel_idx"] = replicate_tree(state_abs["sel_idx"], rules) \
+        if state_abs["sel_idx"] is not None else None
+    return sh
+
+
+def make_decode_cell(cfg: ModelConfig, shape: ShapeConfig, rules: AxisRules):
+    """serve_step for decode cells: one new token against a seq_len cache."""
+    from repro.models.registry import abstract_params
+
+    params_abs = abstract_params(cfg)
+    logical = param_logical_specs(cfg)
+    params_sh = tree_shardings(params_abs, logical, rules)
+    cache_abs = cache_abstract(cfg, shape)
+    cache_sh = cache_shardings(cfg, cache_abs, rules)
+    batch_abs = input_specs(cfg, shape)
+    batch_sh = batch_shardings(cfg, shape, rules)
+
+    def serve_step(params, batch, cache):
+        return D.decode_step(cfg, params, batch, cache)
+
+    return serve_step, (params_abs, batch_abs, cache_abs), \
+        (params_sh, batch_sh, cache_sh)
+
+
+def make_prefill_cell(cfg: ModelConfig, shape: ShapeConfig, rules: AxisRules):
+    from repro.models.registry import abstract_params
+
+    params_abs = abstract_params(cfg)
+    logical = param_logical_specs(cfg)
+    params_sh = tree_shardings(params_abs, logical, rules)
+    batch_abs = input_specs(cfg, shape)
+    batch_sh = batch_shardings(cfg, shape, rules)
+
+    def prefill_step(params, batch):
+        return D.prefill(cfg, params, batch)
+
+    return prefill_step, (params_abs, batch_abs), (params_sh, batch_sh)

@@ -1,0 +1,129 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --smoke \
+        --steps 50 --update-ratio 0.2 --update-layers 2 --ckpt-dir /tmp/run1
+
+Runs the DGSU fine-tuning loop with checkpoint/restart (auto-resume from
+the latest checkpoint in --ckpt-dir), preemption handling (SIGTERM ->
+emergency save), and straggler monitoring. On a real TPU pod the same
+entrypoint runs under `jax.distributed.initialize()` with the production
+mesh; on CPU it uses a debug mesh (or no mesh).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import (OptimizerConfig, ShapeConfig, SparseUpdateConfig,
+                           TrainConfig, get_config, get_smoke_config)
+from repro.data import lm_batches
+from repro.runtime import RestartableLoop, StragglerMonitor
+from repro.train import make_train_state, make_train_step
+
+
+def build_argparser():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=["sgd", "momentum", "adamw"])
+    ap.add_argument("--dense", action="store_true", help="disable DGSU")
+    ap.add_argument("--update-ratio", type=float, default=0.2)
+    ap.add_argument("--update-layers", type=int, default=0,
+                    help="last-K scan blocks (0 = solve from budget)")
+    ap.add_argument("--memory-budget-mb", type=float, default=0.0)
+    ap.add_argument("--channel-block", type=int, default=16)
+    ap.add_argument("--phase-j", type=int, default=10)
+    ap.add_argument("--phase-k", type=int, default=30)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    return ap
+
+
+def main(argv=None):
+    args = build_argparser().parse_args(argv)
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    sparse = SparseUpdateConfig(
+        enabled=not args.dense,
+        update_ratio=args.update_ratio,
+        num_update_layers=args.update_layers,
+        memory_budget_bytes=int(args.memory_budget_mb * 2**20),
+        channel_block=args.channel_block,
+        phase_fixed_early=args.phase_j,
+        phase_dynamic=args.phase_k,
+        phase_fixed_late=max(0, args.steps - args.phase_j - args.phase_k),
+        seed=args.seed,
+    )
+    tc = TrainConfig(
+        model=cfg, shape=shape, sparse=sparse,
+        optimizer=OptimizerConfig(kind=args.optimizer, learning_rate=args.lr,
+                                  warmup_steps=min(20, args.steps // 10),
+                                  decay_steps=args.steps),
+        steps=args.steps, checkpoint_every=args.ckpt_every,
+        checkpoint_dir=args.ckpt_dir, seed=args.seed)
+
+    key = jax.random.PRNGKey(args.seed)
+    state, plan = make_train_state(tc, key)
+    if not args.dense:
+        from repro.core import selected_fraction
+        print(f"[train] DGSU plan: trainable steps/segment={plan.seg_trainable} "
+              f"ratio={args.update_ratio} -> "
+              f"{100*selected_fraction(plan, cfg):.2f}% of params per iter")
+    step_fn = jax.jit(make_train_step(tc, plan), donate_argnums=(0,))
+
+    start = 0
+    mgr = None
+    if args.ckpt_dir:
+        mgr = CheckpointManager(args.ckpt_dir, keep=3)
+        latest = mgr.latest_step()
+        if latest is not None:
+            state, meta = mgr.restore(latest, target=state)
+            start = int(meta["step"])
+            print(f"[train] resumed from step {start}")
+
+    data = lm_batches(shape.global_batch, shape.seq_len, cfg.vocab_size,
+                      seed=args.seed, start_step=start)
+    monitor = StragglerMonitor(
+        on_straggler=lambda s, d, m: print(
+            f"[straggler] step {s}: {d*1e3:.0f}ms vs median {m*1e3:.0f}ms"))
+
+    def on_metrics(step, metrics):
+        if step % args.log_every == 0 or step == args.steps:
+            print(f"[train] step {step:5d} loss={float(metrics['loss']):.4f} "
+                  f"ce={float(metrics['ce']):.4f}", flush=True)
+
+    def wrapped_step(state, batch):
+        return step_fn(state, {k: jnp.asarray(v) for k, v in batch.items()})
+
+    if mgr is not None:
+        loop = RestartableLoop(mgr, state, args.steps,
+                               checkpoint_every=args.ckpt_every,
+                               straggler=monitor)
+        result = loop.run(wrapped_step, data, start_step=start,
+                          on_metrics=on_metrics)
+        print(f"[train] done at step {result['step']}; "
+              f"stragglers={len(result['stragglers'])} "
+              f"emergency={result['emergency']}")
+    else:
+        for step, batch in zip(range(start, args.steps), data):
+            t0 = time.perf_counter()
+            state, metrics = wrapped_step(state, batch)
+            monitor.record(time.perf_counter() - t0)
+            on_metrics(step + 1, metrics)
+        print("[train] done")
+
+
+if __name__ == "__main__":
+    main()

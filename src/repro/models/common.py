@@ -1,0 +1,46 @@
+"""Shared model utilities: init, dtype policy, pytree param helpers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32, scale: float = 1.0):
+    """Truncated-normal fan-in init (matches common LM init)."""
+    fan_in = shape[in_axis] if in_axis is not None else int(np.prod(shape[:-1]))
+    std = scale / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+def tree_size_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def tree_param_count(tree) -> int:
+    return sum(x.size for x in jax.tree.leaves(tree))
+
+
+def stack_layers(layer_params: list):
+    """Stack a list of identically-structured pytrees along a new leading axis
+    (for lax.scan over layers)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *layer_params)
+
+
+def assert_finite(tree, where: str = ""):
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        if not bool(jnp.isfinite(leaf).all()):
+            raise FloatingPointError(f"non-finite values at {where}{jax.tree_util.keystr(path)}")

@@ -1,0 +1,354 @@
+"""Serving paths: prefill (full prompt -> cache + last logits) and
+single-token decode against per-layer caches, for every model family.
+
+Caches are pytrees stacked along the segment scan axis so decode is also a
+lax.scan over layers (carry = hidden state, xs = (params, cache_in),
+ys = cache_out).
+
+Sliding-window attention layers keep ring-buffer caches of size `window`
+(gemma local layers cache 1024 slots even at 500k context). SSM layers
+(mamba/rwkv) cache O(1) recurrent state. This is why long_500k is only
+runnable for ssm/hybrid/local archs — see DESIGN §Arch-applicability.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as MOE
+from repro.models import rwkv6 as R
+from repro.models import transformer as T
+from repro.sharding import constrain
+
+
+def _cache_dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# cache init
+# ---------------------------------------------------------------------------
+
+def _kv_cache_spec(cfg, batch, seq_len, window):
+    return L.init_kv_cache(cfg, batch, seq_len, window=window,
+                           dtype=_cache_dtype(cfg))
+
+
+def _step_cache(cfg, kind: str, batch: int, seq_len: int):
+    dt = _cache_dtype(cfg)
+    if kind == "dense":
+        window = T._window_for(cfg, "dense", 0)
+        return _kv_cache_spec(cfg, batch, seq_len, window)
+    if kind == "moe":
+        return _kv_cache_spec(cfg, batch, seq_len, 0)
+    if kind == "gemma_super":
+        _, l, g = cfg.attn_pattern.split(":")
+        period = int(l) + int(g)
+        return {f"sub{i}": _kv_cache_spec(cfg, batch, seq_len,
+                                          T._window_for(cfg, "gemma_super", i))
+                for i in range(period)}
+    if kind == "jamba_super":
+        period = cfg.attn_every
+        attn_pos = period // 2
+        out = {}
+        for i in range(period):
+            if i == attn_pos:
+                out[f"sub{i}"] = _kv_cache_spec(cfg, batch, seq_len, 0)
+            else:
+                out[f"sub{i}"] = M.init_mamba_cache(cfg, batch, dt)
+        return out
+    if kind == "rwkv":
+        return R.init_rwkv_cache(cfg, batch, dt)
+    raise ValueError(kind)
+
+
+def init_cache(cfg, batch: int, seq_len: int):
+    """Stacked caches per segment (leading axis = scan steps)."""
+    cache = {}
+    for seg in T.segment_layout(cfg):
+        one = _step_cache(cfg, seg.kind, batch, seq_len)
+        cache[seg.name] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (seg.steps,) + a.shape), one)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# decode step
+# ---------------------------------------------------------------------------
+
+def _decode_block(cfg, kind: str, p, x, positions, cache):
+    if kind in ("dense", "moe"):
+        h = L.apply_norm(p["attn_ln"], x)
+        window = T._window_for(cfg, kind, 0) if kind == "dense" else 0
+        a, cache = L.decode_attention(p["attn"], cfg, h, positions, cache,
+                                      window=window)
+        x = x + a
+        h = L.apply_norm(p["mlp_ln"], x)
+        if kind == "moe":
+            y, _ = MOE.apply_moe(p["moe"], cfg, h)
+        else:
+            y = L.apply_mlp(p["mlp"], cfg, h)
+        return x + y, cache
+    if kind == "gemma_super":
+        _, l, g = cfg.attn_pattern.split(":")
+        period = int(l) + int(g)
+        new_cache = {}
+        for i in range(period):
+            sub = p[f"sub{i}"]
+            window = T._window_for(cfg, "gemma_super", i)
+            h = L.apply_norm(sub["attn_ln"], x)
+            a, new_cache[f"sub{i}"] = L.decode_attention(
+                sub["attn"], cfg, h, positions, cache[f"sub{i}"], window=window)
+            x = x + a
+            h = L.apply_norm(sub["mlp_ln"], x)
+            x = x + L.apply_mlp(sub["mlp"], cfg, h)
+        return x, new_cache
+    if kind == "jamba_super":
+        period = cfg.attn_every
+        attn_pos = period // 2
+        new_cache = {}
+        for i in range(period):
+            sub = p[f"sub{i}"]
+            h = L.apply_norm(sub["mixer_ln"], x)
+            if i == attn_pos:
+                a, new_cache[f"sub{i}"] = L.decode_attention(
+                    sub["attn"], cfg, h, positions, cache[f"sub{i}"])
+                x = x + a
+            else:
+                y, new_cache[f"sub{i}"] = M.apply_mamba(
+                    sub["mamba"], cfg, h, cache=cache[f"sub{i}"])
+                x = x + y
+            h = L.apply_norm(sub["ffn_ln"], x)
+            if T._moe_at(cfg, i):
+                y, _ = MOE.apply_moe(sub["moe"], cfg, h)
+            else:
+                y = L.apply_mlp(sub["mlp"], cfg, h)
+            x = x + y
+        return x, new_cache
+    if kind == "rwkv":
+        h = L.apply_norm(p["time_ln"], x)
+        y, tc = R.apply_time_mix(p["time"], cfg, h, cache=cache["time"])
+        x = x + y
+        h = L.apply_norm(p["chan_ln"], x)
+        y, cc = R.apply_channel_mix(p["chan"], cfg, h, cache=cache["chan"])
+        return x + y, {"time": tc, "chan": cc}
+    raise ValueError(kind)
+
+
+def decode_step(cfg, params, batch, cache):
+    """One token for the whole batch.
+
+    batch: {"tokens" [B,1] | "embeds" [B,1,d], "positions" [B,1] or [3,B,1]}
+    Returns (logits [B, V], new_cache).
+    """
+    pair = (params, None)
+    x = T.embed_tokens(cfg, pair, batch)
+    positions = batch.get("positions")
+    if positions is None:
+        raise ValueError("decode_step requires explicit positions")
+
+    new_cache = {}
+    for seg in T.segment_layout(cfg):
+        stack = params["segments"][seg.name]
+
+        def body(x, xs):
+            p_l, c_l = xs
+            x = constrain(x, "batch", "seq", "model_d")
+            x, c_out = _decode_block(cfg, seg.kind, p_l, x, positions, c_l)
+            return x, c_out
+
+        x, new_cache[seg.name] = jax.lax.scan(
+            body, x, (stack, cache[seg.name]))
+    x = L.apply_norm(T._pick(params, None, "final_norm"), x)
+    w_head = T.lm_head_weight(cfg, pair)
+    logits = jnp.einsum("bsd,dv->bsv", x, w_head,
+                        preferred_element_type=jnp.float32)
+    return logits[:, -1], new_cache
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def prefill(cfg, params, batch, pad_to: int = 0):
+    """Run the full prompt, returning (last-token logits [B, V], cache).
+
+    Attention layers: compute K/V for the whole prompt and write them into
+    the cache (ring-layout for windowed layers). SSM layers: run the
+    recurrence and keep the final state.
+    """
+    pair = (params, None)
+    x = T.embed_tokens(cfg, pair, batch)
+    b, s = x.shape[0], x.shape[1]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    pad_to = max(pad_to, s)
+    cache = {}
+    for seg in T.segment_layout(cfg):
+        stack = params["segments"][seg.name]
+
+        def body(x, p_l):
+            x = constrain(x, "batch", "seq", "model_d")
+            x, c_out = _prefill_block(cfg, seg.kind, p_l, x, positions, pad_to)
+            return x, c_out
+
+        x, cache[seg.name] = jax.lax.scan(body, x, stack)
+    x = L.apply_norm(T._pick(params, None, "final_norm"), x)
+    w_head = T.lm_head_weight(cfg, pair)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], w_head,
+                        preferred_element_type=jnp.float32)
+    return logits, cache
+
+
+def _ring_pack(k, window: int):
+    """Pack the last `window` positions of k [B,S,H,D] into a ring buffer of
+    exactly `window` slots (position p lives at slot p % window)."""
+    b, s, h, d = k.shape
+    out = jnp.zeros((b, window, h, d), k.dtype)
+    n = min(s, window)
+    tail = k[:, s - n:]
+    slots = jnp.arange(s - n, s) % window
+    return out.at[:, slots].set(tail)
+
+
+def _pad_cache(k, pad_to: int):
+    b, s, h, d = k.shape
+    if pad_to <= s:
+        return k
+    return jnp.pad(k, ((0, 0), (0, pad_to - s), (0, 0), (0, 0)))
+
+
+def _prefill_attn(cfg, p, x, positions, window, pad_to):
+    b, s, _ = x.shape
+    q, k, v = L._qkv(p, cfg, x, positions)
+    if s > 2048:
+        out = L._sdpa_flash(q, k, v, window)
+    else:
+        out = L._sdpa_dense(q, k, v, window)
+    out = out.reshape(b, s, -1)
+    out = jnp.matmul(out, p["wo"])
+    if window > 0:
+        kc = _ring_pack(k, window).astype(_cache_dtype(cfg))
+        vc = _ring_pack(v, window).astype(_cache_dtype(cfg))
+    else:
+        kc = _pad_cache(k, pad_to).astype(_cache_dtype(cfg))
+        vc = _pad_cache(v, pad_to).astype(_cache_dtype(cfg))
+    cache = {"k": kc, "v": vc, "pos": jnp.array(s, jnp.int32)}
+    return out, cache
+
+
+def _prefill_block(cfg, kind: str, p, x, positions, pad_to):
+    if kind in ("dense", "moe"):
+        window = T._window_for(cfg, kind, 0) if kind == "dense" else 0
+        h = L.apply_norm(p["attn_ln"], x)
+        a, cache = _prefill_attn(cfg, p["attn"], h, positions, window, pad_to)
+        x = x + a
+        h = L.apply_norm(p["mlp_ln"], x)
+        if kind == "moe":
+            y, _ = MOE.apply_moe(p["moe"], cfg, h)
+        else:
+            y = L.apply_mlp(p["mlp"], cfg, h)
+        return x + y, cache
+    if kind == "gemma_super":
+        _, l, g = cfg.attn_pattern.split(":")
+        period = int(l) + int(g)
+        caches = {}
+        for i in range(period):
+            sub = p[f"sub{i}"]
+            window = T._window_for(cfg, "gemma_super", i)
+            h = L.apply_norm(sub["attn_ln"], x)
+            a, caches[f"sub{i}"] = _prefill_attn(cfg, sub["attn"], h,
+                                                 positions, window, pad_to)
+            x = x + a
+            h = L.apply_norm(sub["mlp_ln"], x)
+            x = x + L.apply_mlp(sub["mlp"], cfg, h)
+        return x, caches
+    if kind == "jamba_super":
+        period = cfg.attn_every
+        attn_pos = period // 2
+        caches = {}
+        for i in range(period):
+            sub = p[f"sub{i}"]
+            h = L.apply_norm(sub["mixer_ln"], x)
+            if i == attn_pos:
+                a, caches[f"sub{i}"] = _prefill_attn(cfg, sub["attn"], h,
+                                                     positions, 0, pad_to)
+                x = x + a
+            else:
+                y, state = _mamba_prefill_state(sub["mamba"], cfg, h)
+                caches[f"sub{i}"] = state
+                x = x + y
+            h = L.apply_norm(sub["ffn_ln"], x)
+            if T._moe_at(cfg, i):
+                y, _ = MOE.apply_moe(sub["moe"], cfg, h)
+            else:
+                y = L.apply_mlp(sub["mlp"], cfg, h)
+            x = x + y
+        return x, caches
+    if kind == "rwkv":
+        h = L.apply_norm(p["time_ln"], x)
+        y, ts = _rwkv_prefill_time(p["time"], cfg, h)
+        x = x + y
+        h = L.apply_norm(p["chan_ln"], x)
+        y, _ = R.apply_channel_mix(p["chan"], cfg, h)
+        cc = {"last": h[:, -1]}
+        return x + y, {"time": ts, "chan": cc}
+    raise ValueError(kind)
+
+
+def _mamba_prefill_state(p, cfg, x):
+    """apply_mamba returning the final recurrent state as a cache."""
+    b, s, _ = x.shape
+    dt = _cache_dtype(cfg)
+    out, _ = M.apply_mamba(p, cfg, x)
+    # final conv history = last (d_conv-1) post-in_proj activations
+    xz = jnp.matmul(x, p["in_proj"])
+    x_in = xz[..., : M.d_inner(cfg)]
+    conv = x_in[:, -(cfg.ssm.d_conv - 1):]
+    # final ssm state: recompute the scan's last carry
+    h_last = _mamba_last_state(p, cfg, x)
+    return out, {"h": h_last, "conv": conv.astype(dt)}
+
+
+def _mamba_last_state(p, cfg, x):
+    b = x.shape[0]
+    xz = jnp.matmul(x, p["in_proj"])
+    x_in = xz[..., : M.d_inner(cfg)]
+    x_c = jax.nn.silu(M._causal_depthwise_conv(x_in, p["conv_w"], p["conv_b"]))
+    dbl = jnp.matmul(x_c, p["x_proj"])
+    dr = M.dt_rank(cfg)
+    ns = cfg.ssm.d_state
+    dtv, b_ssm, c_ssm = jnp.split(dbl, [dr, dr + ns], axis=-1)
+    dtv = jax.nn.softplus(dtv.astype(jnp.float32) @ p["dt_proj"].astype(jnp.float32)
+                          + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+    h0 = jnp.zeros((b, M.d_inner(cfg), ns), jnp.float32)
+    _, h_last = M.selective_scan(a, dtv, x_c.astype(jnp.float32),
+                                 b_ssm.astype(jnp.float32),
+                                 c_ssm.astype(jnp.float32), h0)
+    return h_last
+
+
+def _rwkv_prefill_time(p, cfg, x):
+    y, _ = R.apply_time_mix(p, cfg, x)
+    # final state via a dedicated wkv pass
+    b, s, d = x.shape
+    hd = cfg.rwkv.head_dim
+    h = R.num_heads(cfg)
+    xp = R._shift(x)
+    mu = p["mu"].astype(x.dtype)
+    xr, xk, xv, xg, xw = [x + (xp - x) * mu[i] for i in range(5)]
+    r = jnp.matmul(xr, p["wr"]).reshape(b, s, h, hd).astype(jnp.float32)
+    k = jnp.matmul(xk, p["wk"]).reshape(b, s, h, hd).astype(jnp.float32)
+    v = jnp.matmul(xv, p["wv"]).reshape(b, s, h, hd).astype(jnp.float32)
+    wlog = p["w0"] + jnp.tanh(xw.astype(jnp.float32) @ p["wA"]) @ p["wB"]
+    w = jnp.exp(-jnp.exp(wlog)).reshape(b, s, h, hd)
+    s0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    _, s_last = R.wkv(r, k, v, w, p["u"], s0)
+    return y, {"s": s_last, "last": x[:, -1]}

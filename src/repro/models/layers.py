@@ -1,0 +1,400 @@
+"""Core layers: norms, RoPE / M-RoPE, GQA attention (dense / diagonal-block
+flash / sliding-window / cached decode), MLP variants.
+
+All functions are pure; params are plain dicts of jnp arrays. Matmuls that
+participate in dynamic gradient sparse update go through
+``repro.core.sparse_update.smm`` (sparse-matmul) so the backward pass skips
+unselected output-channel blocks.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparse_update import smm
+from repro.models.common import dense_init
+from repro.sharding import constrain
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(key, d: int, kind: str, dtype):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    raise ValueError(kind)
+
+
+def apply_norm(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if "bias" in p:  # layernorm
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = (xf * xf).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def init_group_norm(key, c: int, groups: int, dtype):
+    del groups  # static — passed to apply_group_norm
+    return {"scale": jnp.ones((c,), dtype), "bias": jnp.zeros((c,), dtype)}
+
+
+def apply_group_norm(p, x, groups: int, eps: float = 1e-5):
+    """x: [B, H, W, C] (NHWC)."""
+    b, h, w, c = x.shape
+    g = groups
+    xf = x.astype(jnp.float32).reshape(b, h, w, g, c // g)
+    mu = xf.mean(axis=(1, 2, 4), keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=(1, 2, 4), keepdims=True)
+    y = ((xf - mu) * jax.lax.rsqrt(var + eps)).reshape(b, h, w, c)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, D]; positions: broadcastable to [..., S] int32."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                       # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos = jnp.cos(angles)[..., :, None, :]                    # [..., S, 1, D/2]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope_sections(head_dim: int) -> tuple[int, int, int]:
+    """Pair-counts for (temporal, height, width); qwen2-vl uses 16/24/24 of 64
+    pairs for head_dim=128 — i.e. fractions (1/4, 3/8, 3/8)."""
+    pairs = head_dim // 2
+    t = pairs // 4
+    h = (pairs - t) // 2
+    w = pairs - t - h
+    return t, h, w
+
+
+def apply_mrope(x, positions_thw, theta: float):
+    """M-RoPE (qwen2-vl): positions_thw [3, ..., S]; frequency bands are
+    partitioned between the three position components."""
+    d = x.shape[-1]
+    pairs = d // 2
+    t, h, w = mrope_sections(d)
+    freqs = rope_frequencies(d, theta)                       # [pairs]
+    section = jnp.concatenate([
+        jnp.zeros((t,), jnp.int32), jnp.ones((h,), jnp.int32),
+        jnp.full((w,), 2, jnp.int32)])
+    # pick position component per frequency band
+    pos = jnp.take(positions_thw, section, axis=0)           # [pairs, ..., S]
+    pos = jnp.moveaxis(pos, 0, -1)                           # [..., S, pairs]
+    angles = pos.astype(jnp.float32) * freqs                 # [..., S, pairs]
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg, dtype):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, (d, cfg.num_heads * hd), dtype=dtype),
+        "wk": dense_init(kk, (d, cfg.num_kv_heads * hd), dtype=dtype),
+        "wv": dense_init(kv, (d, cfg.num_kv_heads * hd), dtype=dtype),
+        "wo": dense_init(ko, (cfg.num_heads * hd, d), dtype=dtype),
+    }
+
+
+def _qkv(p, cfg, x, positions, sel=None):
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    q = smm(x, p["wq"], sel, "wq").reshape(b, s, cfg.num_heads, hd)
+    k = smm(x, p["wk"], sel, "wk").reshape(b, s, cfg.num_kv_heads, hd)
+    v = smm(x, p["wv"], sel, "wv").reshape(b, s, cfg.num_kv_heads, hd)
+    if getattr(cfg, "mrope", False):
+        q = apply_mrope(q, positions, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.rope_theta)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", "seq", "heads", None)
+    k = constrain(k, "batch", "seq", "kv_heads", None)
+    v = constrain(v, "batch", "seq", "kv_heads", None)
+    return q, k, v
+
+
+def _expand_kv(k, hq: int):
+    """GQA expansion via gather (sharding-friendly on the head axis):
+    [B,S,Hkv,D] -> [B,S,Hq,D]."""
+    hkv = k.shape[2]
+    if hkv == hq:
+        return k
+    return jnp.take(k, jnp.arange(hq) // (hq // hkv), axis=2)
+
+
+def _sdpa_dense(q, k, v, window: int = 0):
+    """Materialized causal attention. q:[B,S,Hq,D] k,v:[B,S,Hkv,D]."""
+    b, s, hq, dd = q.shape
+    k = _expand_kv(k, hq)
+    v = _expand_kv(v, hq)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / math.sqrt(dd)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = kpos <= qpos
+    if window:
+        mask &= (qpos - kpos) < window
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    return out
+
+
+def _diag_mask(c: int, diag: int, window: int):
+    qpos_in = jnp.arange(c)[:, None]
+    kpos_in = jnp.arange(c)[None, :]
+    delta = qpos_in - kpos_in + diag * c     # distance q-k; >= 0 is causal
+    mask = delta >= 0
+    if window:
+        mask &= delta < window
+    return mask
+
+
+def _flash_fwd_impl(q, k, v, window: int, c: int):
+    """Diagonal-block causal flash attention forward (pure jnp, online
+    softmax). Only on/below-diagonal blocks are computed (no causal-FLOP
+    waste); sliding windows statically truncate the diagonal range.
+    Returns (out [b,s,h,d], lse [b,n,c,h])."""
+    b, s, hq, dd = q.shape
+    n = s // c
+    qb = q.reshape(b, n, c, hq, dd)
+    kb = k.reshape(b, n, c, hq, dd)
+    vb = v.reshape(b, n, c, hq, dd)
+
+    scale = 1.0 / math.sqrt(dd)
+    m = jnp.full((b, n, c, hq), -1e30, jnp.float32)    # running max
+    l = jnp.zeros((b, n, c, hq), jnp.float32)           # running denom
+    o = jnp.zeros((b, n, c, hq, dd), jnp.float32)       # running numer
+
+    max_diag = n if not window else min(n, (window + c - 1) // c + 1)
+    for diag in range(max_diag):
+        nb = n - diag                        # blocks on this diagonal
+        qs = qb[:, diag:, ...]               # [b, nb, c, hq, dd]
+        ks = kb[:, :nb, ...]
+        vs = vb[:, :nb, ...]
+        sc = jnp.einsum("bnqhd,bnkhd->bnqhk", qs, ks,
+                        preferred_element_type=jnp.float32) * scale
+        mask = _diag_mask(c, diag, window)
+        sc = jnp.where(mask[None, None, :, None, :], sc, -1e30)
+        blk_m = sc.max(axis=-1)                                  # [b,nb,c,hq]
+        m_old = m[:, diag:, ...]
+        m_new = jnp.maximum(m_old, blk_m)
+        p = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(m_old - m_new)
+        l = l.at[:, diag:, ...].set(l[:, diag:, ...] * corr + p.sum(axis=-1))
+        pv = jnp.einsum("bnqhk,bnkhd->bnqhd", p.astype(q.dtype), vs,
+                        preferred_element_type=jnp.float32)
+        o = o.at[:, diag:, ...].set(o[:, diag:, ...] * corr[..., None] + pv)
+        m = m.at[:, diag:, ...].set(m_new)
+    out = o / jnp.maximum(l[..., None], 1e-30)
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    return out.astype(q.dtype).reshape(b, s, hq, dd), lse
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _flash_attn(q, k, v, window: int, c: int):
+    return _flash_fwd_impl(q, k, v, window, c)[0]
+
+
+def _flash_attn_fwd(q, k, v, window, c):
+    out, lse = _flash_fwd_impl(q, k, v, window, c)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_attn_bwd(window, c, res, dout):
+    """Flash backward: recompute probabilities per diagonal from (q,k,lse)
+    — O(S·d) residual memory instead of O(S^2) (the dominant training-memory
+    term at 4k+ sequence lengths; see EXPERIMENTS.md §Perf iteration 1)."""
+    q, k, v, out, lse = res
+    b, s, hq, dd = q.shape
+    n = s // c
+    scale = 1.0 / math.sqrt(dd)
+    qb = q.reshape(b, n, c, hq, dd)
+    kb = k.reshape(b, n, c, hq, dd)
+    vb = v.reshape(b, n, c, hq, dd)
+    dob = dout.reshape(b, n, c, hq, dd)
+    ob = out.reshape(b, n, c, hq, dd)
+    # delta_i = sum_d dout_i * out_i  (the softmax normalization term)
+    delta = jnp.einsum("bnqhd,bnqhd->bnqh", dob.astype(jnp.float32),
+                       ob.astype(jnp.float32))
+
+    dq = jnp.zeros((b, n, c, hq, dd), jnp.float32)
+    dk = jnp.zeros((b, n, c, hq, dd), jnp.float32)
+    dv = jnp.zeros((b, n, c, hq, dd), jnp.float32)
+    max_diag = n if not window else min(n, (window + c - 1) // c + 1)
+    for diag in range(max_diag):
+        nb = n - diag
+        qs = qb[:, diag:, ...]
+        ks = kb[:, :nb, ...]
+        vs = vb[:, :nb, ...]
+        dos = dob[:, diag:, ...]
+        sc = jnp.einsum("bnqhd,bnkhd->bnqhk", qs, ks,
+                        preferred_element_type=jnp.float32) * scale
+        mask = _diag_mask(c, diag, window)
+        sc = jnp.where(mask[None, None, :, None, :], sc, -1e30)
+        p = jnp.exp(sc - lse[:, diag:, :, :, None])          # normalized probs
+        dv = dv.at[:, :nb].add(jnp.einsum(
+            "bnqhk,bnqhd->bnkhd", p.astype(q.dtype), dos,
+            preferred_element_type=jnp.float32))
+        dp = jnp.einsum("bnqhd,bnkhd->bnqhk", dos, vs,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, diag:, :, :, None]) * scale
+        ds = ds.astype(q.dtype)
+        dq = dq.at[:, diag:].add(jnp.einsum(
+            "bnqhk,bnkhd->bnqhd", ds, ks, preferred_element_type=jnp.float32))
+        dk = dk.at[:, :nb].add(jnp.einsum(
+            "bnqhk,bnqhd->bnkhd", ds, qs, preferred_element_type=jnp.float32))
+    rs = lambda t: t.reshape(b, s, hq, dd).astype(q.dtype)
+    return rs(dq), rs(dk), rs(dv)
+
+
+_flash_attn.defvjp(_flash_attn_fwd, _flash_attn_bwd)
+
+
+def _sdpa_flash(q, k, v, window: int = 0, q_chunk: int = 512,
+                kv_chunk: int = 512, naive_vjp: bool = False):
+    """Memory-efficient causal attention. naive_vjp=True keeps plain
+    autodiff (O(S^2) residuals) — the pre-optimization baseline."""
+    b, s, hq, dd = q.shape
+    if s <= q_chunk:
+        return _sdpa_dense(q, k, v, window)
+    assert s % q_chunk == 0 and s % kv_chunk == 0 and q_chunk == kv_chunk, (
+        "flash path requires equal, dividing chunks")
+    k = _expand_kv(k, hq)
+    v = _expand_kv(v, hq)
+    if naive_vjp:
+        return _flash_fwd_impl(q, k, v, window, q_chunk)[0]
+    return _flash_attn(q, k, v, window, q_chunk)
+
+
+def attention(p, cfg, x, positions, *, window: int = 0, sel=None,
+              flash_threshold: int = 2048):
+    """Full training/prefill attention over a whole sequence."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, positions, sel=sel)
+    if s > flash_threshold:
+        out = _sdpa_flash(q, k, v, window)
+    else:
+        out = _sdpa_dense(q, k, v, window)
+    out = out.reshape(b, s, -1)
+    return smm(out, p["wo"], sel, "wo")
+
+
+def decode_attention(p, cfg, x, positions, cache, *, window: int = 0):
+    """Single-token decode against a KV cache.
+
+    cache: {"k","v": [B, S_cache, Hkv, D], "pos": scalar int32 tokens-so-far}
+    For sliding-window layers the cache is a ring buffer of size `window`.
+    """
+    b, s, _ = x.shape
+    assert s == 1
+    hd = cfg.resolved_head_dim
+    q, k, v = _qkv(p, cfg, x, positions)
+    pos = cache["pos"]                    # position index of the new token
+    s_cache = cache["k"].shape[1]
+    # ring buffer when windowed (s_cache == window), else direct slot
+    slot = pos % s_cache if window > 0 else pos
+    k_cache = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+
+    hkv = cfg.num_kv_heads
+    g = cfg.num_heads // hkv
+    qg = q.reshape(b, hkv, g, hd)
+    scores = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+                        preferred_element_type=jnp.float32) / math.sqrt(hd)
+    idx = jnp.arange(s_cache)
+    if window > 0:
+        # slot i currently holds position p_at = pos - ((pos - i) mod W);
+        # by construction pos - W < p_at <= pos, so only p_at >= 0 matters.
+        p_at = pos - jnp.mod(pos - idx, s_cache)
+        valid = p_at >= 0
+    else:
+        valid = idx <= pos
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", probs.astype(q.dtype), v_cache,
+                     preferred_element_type=jnp.float32).astype(q.dtype)
+    out = out.reshape(b, 1, cfg.num_heads * hd)
+    new_cache = {"k": k_cache, "v": v_cache, "pos": pos + 1}
+    return smm(out, p["wo"], None, "wo"), new_cache
+
+
+def init_kv_cache(cfg, batch: int, seq_len: int, *, window: int = 0, dtype=None):
+    hd = cfg.resolved_head_dim
+    size = min(window, seq_len) if window > 0 else seq_len
+    dt = dtype or jnp.dtype(cfg.dtype)
+    return {
+        "k": jnp.zeros((batch, size, cfg.num_kv_heads, hd), dt),
+        "v": jnp.zeros((batch, size, cfg.num_kv_heads, hd), dt),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg, dtype, d_ff: Optional[int] = None):
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    kind = cfg.mlp_kind
+    if kind == "swiglu":
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {"w_gate": dense_init(k1, (d, ff), dtype=dtype),
+                "w_up": dense_init(k2, (d, ff), dtype=dtype),
+                "w_down": dense_init(k3, (ff, d), dtype=dtype)}
+    if kind in ("gelu", "sq_relu"):
+        k1, k2 = jax.random.split(key, 2)
+        return {"w_up": dense_init(k1, (d, ff), dtype=dtype),
+                "w_down": dense_init(k2, (ff, d), dtype=dtype)}
+    raise ValueError(kind)
+
+
+def apply_mlp(p, cfg, x, sel=None):
+    kind = cfg.mlp_kind
+    if kind == "swiglu":
+        h = jax.nn.silu(smm(x, p["w_gate"], sel, "w_gate")) * smm(x, p["w_up"], sel, "w_up")
+    elif kind == "gelu":
+        h = jax.nn.gelu(smm(x, p["w_up"], sel, "w_up"))
+    elif kind == "sq_relu":
+        h = jax.nn.relu(smm(x, p["w_up"], sel, "w_up"))
+        h = h * h
+    else:
+        raise ValueError(kind)
+    h = constrain(h, "batch", "seq", "ff")
+    return smm(h, p["w_down"], sel, "w_down")

@@ -1,0 +1,157 @@
+"""Mamba-1 selective-scan block (jamba's SSM mixer), pure JAX.
+
+Memory strategy: everything of size [B, S, d_inner] is materialized once;
+the [B, S, d_inner, d_state] discretized tensors only ever exist per-chunk
+inside a rematerialized (jax.checkpoint) chunk scan whose carry is the
+[B, d_inner, d_state] state — so training memory is O(S·d_inner +
+chunk·d_inner·d_state), the SSM analogue of flash attention.
+
+TP: d_inner is sharded over the model axis (in_proj column-, out_proj
+row-parallel); the recurrence is elementwise in d_inner so it needs no
+collectives.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparse_update import smm
+from repro.models.common import dense_init
+from repro.sharding import constrain
+
+CHUNK = 64
+
+
+def dt_rank(cfg) -> int:
+    return max(1, math.ceil(cfg.d_model / 16))
+
+
+def d_inner(cfg) -> int:
+    return cfg.ssm.expand * cfg.d_model
+
+
+def init_mamba(key, cfg, dtype):
+    d = cfg.d_model
+    di = d_inner(cfg)
+    ns = cfg.ssm.d_state
+    dr = dt_rank(cfg)
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A
+    a = jnp.tile(jnp.arange(1, ns + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dtype=dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm.d_conv, di), dtype=dtype, scale=1.0),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], (di, dr + 2 * ns), dtype=dtype),
+        "dt_proj": dense_init(ks[3], (dr, di), dtype=dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.clip(jax.random.uniform(ks[4], (di,), jnp.float32) * 0.1,
+                     1e-3, None))).astype(jnp.float32),
+        "A_log": jnp.log(a),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], (di, d), dtype=dtype),
+    }
+
+
+def _causal_depthwise_conv(x, w, b):
+    """x: [B, S, C]; w: [K, C] causal depthwise conv."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):
+        out = out + pad[:, i: i + x.shape[1], :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _discretize(a, dt, xc, b_ssm):
+    """dt, xc: [B,Q,D] fp32; b_ssm: [B,Q,N] -> dA, dBx [B,Q,D,N] fp32."""
+    dA = jnp.exp(dt[..., None] * a)
+    dBx = (dt * xc)[..., None] * b_ssm[..., None, :]
+    return dA, dBx
+
+
+def _ssm_chunk(a, carry, chunk):
+    """carry: h [B, D, N]; chunk: (dt, xc, b, c) sized [B,Q,D]/[B,Q,N].
+    The [B, Q, D, N] discretized tensors exist only inside this
+    (rematerialized) chunk."""
+    h0 = carry
+    dt, xc, b_ssm, c = chunk
+    dA, dBx = _discretize(a, dt, xc, b_ssm)
+    # associative affine scan: (a, b) o (a', b') = (a*a', a'*b + b')
+    def op(l, r):
+        return (l[0] * r[0], r[0] * l[1] + r[1])
+    a_cum, b_cum = jax.lax.associative_scan(op, (dA, dBx), axis=1)
+    h = a_cum * h0[:, None] + b_cum                   # [B, Q, D, N]
+    y = jnp.einsum("bqdn,bqn->bqd", h, c)
+    return h[:, -1], y
+
+
+def selective_scan(a, dt, xc, b_ssm, c, h0):
+    """dt, xc: [B, S, D] fp32; b_ssm, c: [B, S, N] -> (y [B,S,D], h_last)."""
+    b, s, d = dt.shape
+    q = min(CHUNK, s)
+    assert s % q == 0
+    nc = s // q
+    resh = lambda t: t.reshape((b, nc, q) + t.shape[2:]).swapaxes(0, 1)
+    body = jax.checkpoint(partial(_ssm_chunk, a))
+    h_last, ys = jax.lax.scan(body, h0, (resh(dt), resh(xc),
+                                         resh(b_ssm), resh(c)))
+    y = ys.swapaxes(0, 1).reshape(b, s, d)
+    return y, h_last
+
+
+def apply_mamba(p, cfg, x, sel=None, cache=None):
+    """x: [B, S, d]. cache (decode): {"h": [B,D,N], "conv": [B, K-1, D]}.
+    Returns (out, new_cache|None)."""
+    b, s, d = x.shape
+    di = d_inner(cfg)
+    ns = cfg.ssm.d_state
+    dr = dt_rank(cfg)
+
+    xz = smm(x, p["in_proj"], sel, "in_proj")
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_in = constrain(x_in, "batch", "seq", "d_inner")
+
+    if cache is None:
+        x_c = jax.nn.silu(_causal_depthwise_conv(x_in, p["conv_w"], p["conv_b"]))
+        new_conv = None
+    else:
+        hist = jnp.concatenate([cache["conv"], x_in], axis=1)  # [B, K-1+1, D]
+        w = p["conv_w"]
+        acc = jnp.einsum("bkd,kd->bd", hist.astype(jnp.float32),
+                         w.astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+        x_c = jax.nn.silu(acc)[:, None, :].astype(x.dtype)
+        new_conv = hist[:, 1:]
+
+    dbl = smm(x_c, p["x_proj"], sel, "x_proj")
+    dt, b_ssm, c_ssm = jnp.split(dbl, [dr, dr + ns], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) @ p["dt_proj"].astype(jnp.float32)
+                         + p["dt_bias"])                      # [B,S,D] fp32
+    a = -jnp.exp(p["A_log"])                                   # [D,N]
+    xc32 = x_c.astype(jnp.float32)
+    b32 = b_ssm.astype(jnp.float32)
+    c32 = c_ssm.astype(jnp.float32)
+
+    h0 = cache["h"] if cache is not None else jnp.zeros((b, di, ns), jnp.float32)
+    if cache is None:
+        y, h_last = selective_scan(a, dt, xc32, b32, c32, h0)
+    else:
+        dA, dBx = _discretize(a, dt[:, 0], xc32[:, 0], b32[:, 0])
+        h_last = dA * h0 + dBx
+        y = jnp.einsum("bdn,bn->bd", h_last, c32[:, 0])[:, None]
+
+    y = y + p["D"] * x_c.astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = smm(y, p["out_proj"], sel, "out_proj")
+    new_cache = None if cache is None else {"h": h_last, "conv": new_conv}
+    return out, new_cache
+
+
+def init_mamba_cache(cfg, batch: int, dtype):
+    return {
+        "h": jnp.zeros((batch, d_inner(cfg), cfg.ssm.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm.d_conv - 1, d_inner(cfg)), dtype),
+    }

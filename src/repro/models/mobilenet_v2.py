@@ -1,0 +1,211 @@
+"""MobileNetV2 + GroupNorm — the paper's own experiment substrate.
+
+BN is replaced by GN (paper §IV-A: batch-independent statistics for bs=1
+edge training); GN layers are FROZEN during transfer (paper §IV-C).
+
+Sparse update: 1x1 (pointwise) convs participate in channel-block selection
+via `sconv` (conv analogue of core.sparse_update.smm — dW computed only for
+selected output-channel blocks). Depthwise 3x3 convs are layer-selected but
+not channel-masked (<2% of conv params; recorded in DESIGN §8).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+from repro.models.layers import apply_group_norm, init_group_norm
+
+
+# ---------------------------------------------------------------------------
+# sparse conv (paper's gradient skip for convolutions)
+# ---------------------------------------------------------------------------
+
+def _conv(x, w, stride: int, groups: int = 1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _sconv(x, w, idx, stride: int, spec):
+    return _conv(x, w, stride)
+
+
+def _sconv_fwd(x, w, idx, stride, spec):
+    return _conv(x, w, stride), (x, w, idx)
+
+
+def _sconv_bwd(stride, spec, res, dy):
+    x, w, idx = res
+    _, dx_fn = jax.vjp(lambda x_: _conv(x_, w, stride), x)
+    (dx,) = dx_fn(dy)
+    block, n_sel, n_blocks = spec
+    # gather selected output-channel blocks of dy (channels last)
+    dyb = dy.reshape(dy.shape[:-1] + (n_blocks, block))
+    idxb = idx.reshape(idx.shape[-1])  # [n_sel] (single shard on edge device)
+    dy_sel = jnp.take(dyb, idxb, axis=-2).reshape(dy.shape[:-1] + (n_sel * block,))
+    w_sel_shape = w.shape[:-1] + (n_sel * block,)
+    _, dw_fn = jax.vjp(
+        lambda w_: _conv(x, w_, stride), jnp.zeros(w_sel_shape, w.dtype))
+    (dw_sel,) = dw_fn(dy_sel)
+    dw_selb = dw_sel.reshape(w.shape[:-1] + (n_sel, block))
+    zeros = jnp.zeros(w.shape[:-1] + (n_blocks, block), w.dtype)
+    dw = zeros.at[..., idxb, :].set(dw_selb).reshape(w.shape)
+    return dx, dw, None
+
+
+_sconv.defvjp(_sconv_fwd, _sconv_bwd)
+
+
+def sconv(x, w, sel, name: str, stride: int = 1, groups: int = 1):
+    if sel is not None and groups == 1:
+        idx_dict, spec_dict = sel
+        if idx_dict is not None and name in idx_dict:
+            sp = spec_dict[name]
+            return _sconv(x, w, idx_dict[name], stride,
+                          (sp.block, sp.n_sel, sp.n_blocks))
+    return _conv(x, w, stride, groups)
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+def _make_divisible(v, divisor=8):
+    new_v = max(divisor, int(v + divisor / 2) // divisor * divisor)
+    if new_v < 0.9 * v:
+        new_v += divisor
+    return new_v
+
+
+def conv_layer_names(cfg) -> list[str]:
+    """Ordered conv weight names, forward order (for last-K selection)."""
+    names = ["stem/w"]
+    idx = 0
+    for t, c, n, s in cfg.inverted_residual_setting:
+        for i in range(n):
+            base = f"b{idx}"
+            if t != 1:
+                names.append(f"{base}/expand/w")
+            names.append(f"{base}/dw/w")
+            names.append(f"{base}/project/w")
+            idx += 1
+    names.append("head/w")
+    return names
+
+
+def init_params(cfg, key) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    wm = cfg.width_mult
+    params: dict[str, Any] = {}
+    keys = iter(jax.random.split(key, 200))
+
+    def conv_init(k, shape):
+        fan_in = shape[0] * shape[1] * shape[2]
+        return (jax.random.truncated_normal(k, -2, 2, shape, jnp.float32)
+                * (2.0 / fan_in) ** 0.5).astype(dtype)
+
+    c_in = cfg.in_channels
+    c_stem = _make_divisible(cfg.stem_channels * wm)
+    params["stem"] = {"w": conv_init(next(keys), (3, 3, c_in, c_stem)),
+                      "gn": init_group_norm(next(keys), c_stem, cfg.gn_groups, dtype)}
+    c_prev = c_stem
+    idx = 0
+    for t, c, n, s in cfg.inverted_residual_setting:
+        c_out = _make_divisible(c * wm)
+        for i in range(n):
+            stride = s if i == 0 else 1
+            hidden = c_prev * t
+            blk = {}
+            if t != 1:
+                blk["expand"] = {"w": conv_init(next(keys), (1, 1, c_prev, hidden)),
+                                 "gn": init_group_norm(next(keys), hidden,
+                                                       cfg.gn_groups, dtype)}
+            blk["dw"] = {"w": conv_init(next(keys), (3, 3, 1, hidden)),
+                         "gn": init_group_norm(next(keys), hidden,
+                                               cfg.gn_groups, dtype)}
+            blk["project"] = {"w": conv_init(next(keys), (1, 1, hidden, c_out)),
+                              "gn": init_group_norm(next(keys), c_out,
+                                                    cfg.gn_groups, dtype)}
+            params[f"b{idx}"] = blk
+            c_prev = c_out
+            idx += 1
+    c_head = _make_divisible(cfg.head_channels * max(1.0, wm))
+    params["head"] = {"w": conv_init(next(keys), (1, 1, c_prev, c_head)),
+                      "gn": init_group_norm(next(keys), c_head, cfg.gn_groups, dtype)}
+    params["classifier"] = {"w": dense_init(next(keys), (c_head, cfg.num_classes),
+                                            dtype=dtype),
+                            "b": jnp.zeros((cfg.num_classes,), dtype)}
+    return params
+
+
+def _pick(frozen, trainable, *path):
+    for tree in (trainable, frozen):
+        if tree is None:
+            continue
+        node = tree
+        ok = True
+        for k in path:
+            if not isinstance(node, dict) or k not in node or node[k] is None:
+                ok = False
+                break
+            node = node[k]
+        if ok:
+            return node
+    raise KeyError(path)
+
+
+def forward(cfg, params_pair, images, sel=None, act_prune=None):
+    """images: [B, H, W, 3] -> logits [B, num_classes].
+
+    act_prune: optional callable applied to post-ReLU activations (block
+    activation pruning, core.act_prune)."""
+    frozen, trainable = params_pair
+    relu6 = lambda v: jnp.clip(v, 0.0, 6.0)
+    ap = act_prune if act_prune is not None else (lambda v: v)
+
+    def cbr(x, p, name, stride=1, groups=1):
+        x = sconv(x, p["w"], sel, name, stride=stride, groups=groups)
+        x = apply_group_norm(p["gn"], x, cfg.gn_groups)
+        return ap(relu6(x))
+
+    x = images
+    p = _pick(frozen, trainable, "stem")
+    x = cbr(x, p, "stem/w", stride=2)
+    idx = 0
+    for t, c, n, s in cfg.inverted_residual_setting:
+        for i in range(n):
+            base = f"b{idx}"
+            blk = _pick(frozen, trainable, base)
+            inp = x
+            if "expand" in blk:
+                x = cbr(x, blk["expand"], f"{base}/expand/w")
+            stride = s if i == 0 else 1
+            hidden = x.shape[-1]
+            x = cbr(x, blk["dw"], f"{base}/dw/w", stride=stride, groups=hidden)
+            x = sconv(x, blk["project"]["w"], sel, f"{base}/project/w")
+            x = apply_group_norm(blk["project"]["gn"], x, cfg.gn_groups)
+            if stride == 1 and inp.shape == x.shape:
+                x = x + inp
+            idx += 1
+    p = _pick(frozen, trainable, "head")
+    x = cbr(x, p, "head/w")
+    x = x.mean(axis=(1, 2))
+    cl = _pick(frozen, trainable, "classifier")
+    return x @ cl["w"] + cl["b"]
+
+
+def loss_fn(cfg, params_pair, batch, sel=None, act_prune=None):
+    logits = forward(cfg, params_pair, batch["images"], sel=sel,
+                     act_prune=act_prune).astype(jnp.float32)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(lse - gold)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"acc": acc}

@@ -1,0 +1,5 @@
+from repro.optim.optimizers import (init_opt_state, apply_updates,
+                                    learning_rate, clip_by_global_norm)
+
+__all__ = ["init_opt_state", "apply_updates", "learning_rate",
+           "clip_by_global_norm"]

@@ -1,0 +1,108 @@
+"""Optimizers (built from scratch — no optax in this environment).
+
+Paper-faithful default: SGD momentum 0 (zero optimizer state — the paper's
+memory argument), linear warmup + cosine decay. SGD-momentum and AdamW are
+provided for the framework; with dynamic channel re-selection their state
+for newly-selected channels is implicitly zero, matching the paper's
+"reselect and continue" semantics (stale state for deselected channels is
+kept but frozen — it receives zero gradients).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+
+def learning_rate(oc: OptimizerConfig, step) -> jnp.ndarray:
+    """Linear warmup then cosine decay (paper §IV-A)."""
+    step = jnp.asarray(step, jnp.float32)
+    lr = jnp.asarray(oc.learning_rate, jnp.float32)
+    if oc.warmup_steps > 0:
+        warm = jnp.minimum(1.0, (step + 1.0) / oc.warmup_steps)
+    else:
+        warm = 1.0
+    if oc.decay_steps > 0:
+        t = jnp.clip((step - oc.warmup_steps) /
+                     max(1, oc.decay_steps - oc.warmup_steps), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    else:
+        cos = 1.0
+    return lr * warm * cos
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    if max_norm <= 0:
+        return grads, jnp.zeros(())
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), norm
+
+
+def init_opt_state(oc: OptimizerConfig, trainable) -> dict:
+    if oc.kind == "sgd" and oc.momentum == 0.0:
+        return {}                                # paper default: zero state
+    if oc.kind in ("sgd", "momentum"):
+        return {"mu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                   trainable)}
+    if oc.kind == "adamw":
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"mu": jax.tree.map(z, trainable),
+                "nu": jax.tree.map(z, trainable)}
+    raise ValueError(oc.kind)
+
+
+def apply_updates(oc: OptimizerConfig, params, grads, state: dict, step):
+    """Returns (new_params, new_state). Gradients are already channel-block
+    sparse (zeros outside the selection) — updates touch only selected
+    blocks."""
+    lr = learning_rate(oc, step)
+    grads, gnorm = clip_by_global_norm(grads, oc.grad_clip)
+
+    if oc.kind == "sgd" and oc.momentum == 0.0:
+        def upd(p, g):
+            new = p.astype(jnp.float32) - lr * g.astype(jnp.float32)
+            if oc.weight_decay:
+                new = new - lr * oc.weight_decay * p.astype(jnp.float32)
+            return new.astype(p.dtype)
+        return jax.tree.map(upd, params, grads), state
+
+    if oc.kind in ("sgd", "momentum"):
+        def upd(p, g, mu):
+            mu_new = oc.momentum * mu + g.astype(jnp.float32)
+            new = p.astype(jnp.float32) - lr * mu_new
+            if oc.weight_decay:
+                new = new - lr * oc.weight_decay * p.astype(jnp.float32)
+            return new.astype(p.dtype), mu_new
+        out = jax.tree.map(upd, params, grads, state["mu"])
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"mu": new_mu}
+
+    if oc.kind == "adamw":
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        b1, b2 = oc.beta1, oc.beta2
+
+        def upd(p, g, mu, nu):
+            g32 = g.astype(jnp.float32)
+            mu_new = b1 * mu + (1 - b1) * g32
+            nu_new = b2 * nu + (1 - b2) * g32 * g32
+            mu_hat = mu_new / (1 - b1 ** t)
+            nu_hat = nu_new / (1 - b2 ** t)
+            new = p.astype(jnp.float32) - lr * (
+                mu_hat / (jnp.sqrt(nu_hat) + oc.eps)
+                + oc.weight_decay * p.astype(jnp.float32))
+            return new.astype(p.dtype), mu_new, nu_new
+        out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+        is3 = lambda x: isinstance(x, tuple)
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=is3)
+        new_mu = jax.tree.map(lambda o: o[1], out, is_leaf=is3)
+        new_nu = jax.tree.map(lambda o: o[2], out, is_leaf=is3)
+        return new_p, {"mu": new_mu, "nu": new_nu}
+
+    raise ValueError(oc.kind)

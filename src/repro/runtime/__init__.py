@@ -1,0 +1,3 @@
+from repro.runtime.fault import PreemptionHandler, StragglerMonitor, RestartableLoop
+
+__all__ = ["PreemptionHandler", "StragglerMonitor", "RestartableLoop"]

@@ -1,0 +1,134 @@
+"""Logical-axis sharding rules (MaxText-style) + ambient mesh context.
+
+Models annotate activations/params with *logical* axis names; the trainer
+installs a rule set mapping logical names -> mesh axes. With no rules
+installed (CPU unit tests) everything is a no-op, so model code is
+mesh-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Logical axis vocabulary used across the model zoo:
+#   batch      - global batch                  -> ("pod", "data")
+#   seq        - sequence (activations)        -> None (or "data" for long decode cache)
+#   cache_seq  - kv-cache sequence             -> None / "data" for long_500k
+#   model_d    - d_model embed dim             -> None (replicated)
+#   heads      - attention query heads         -> "model"
+#   kv_heads   - attention kv heads            -> "model"
+#   ff         - FFN hidden                    -> "model"
+#   vocab      - vocabulary                    -> "model"
+#   expert     - MoE expert                    -> "model"
+#   layers     - stacked-layer leading axis    -> None
+#   d_inner    - mamba/rwkv inner channels     -> "model"
+
+_STATE = threading.local()
+
+
+class AxisRules:
+    def __init__(self, rules: dict[str, Optional[tuple[str, ...] | str]],
+                 mesh: Optional[Mesh] = None,
+                 batch_axes: tuple[str, ...] = (),
+                 model_axis: Optional[str] = None):
+        self.rules = rules
+        self.mesh = mesh
+        self.batch_axes = batch_axes   # mesh axes carrying data parallelism
+        self.model_axis = model_axis   # mesh axis carrying tensor/expert parallelism
+
+    def resolve(self, *logical: Optional[str]) -> P:
+        out = []
+        for name in logical:
+            if name is None:
+                out.append(None)
+            else:
+                out.append(self.rules.get(name))
+        return P(*out)
+
+
+def default_rules(mesh: Mesh) -> AxisRules:
+    names = mesh.axis_names
+    batch_axes = tuple(a for a in ("pod", "data") if a in names)
+    model_axis = "model" if "model" in names else None
+    rules = {
+        "batch": batch_axes or None,
+        "seq": None,
+        "cache_seq": None,
+        "model_d": None,
+        "heads": model_axis,
+        "kv_heads": model_axis,
+        "ff": model_axis,
+        "vocab": model_axis,
+        "expert": model_axis,
+        "layers": None,
+        "d_inner": model_axis,
+        "sel": None,
+    }
+    return AxisRules(rules, mesh=mesh, batch_axes=batch_axes, model_axis=model_axis)
+
+
+def seq_sharded_rules(mesh: Mesh) -> AxisRules:
+    """Rules for long-context decode: KV cache sequence sharded over data
+    (batch too small to shard). Used by long_500k."""
+    r = default_rules(mesh)
+    rules = dict(r.rules)
+    rules["cache_seq"] = r.batch_axes or None
+    rules["batch"] = None
+    return AxisRules(rules, mesh=mesh, batch_axes=r.batch_axes,
+                     model_axis=r.model_axis)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[AxisRules]):
+    prev = getattr(_STATE, "rules", None)
+    _STATE.rules = rules
+    try:
+        yield rules
+    finally:
+        _STATE.rules = prev
+
+
+def current_rules() -> Optional[AxisRules]:
+    return getattr(_STATE, "rules", None)
+
+
+def logical_spec(*logical: Optional[str]) -> P:
+    r = current_rules()
+    if r is None:
+        return P()
+    return r.resolve(*logical)
+
+
+def constrain(x, *logical: Optional[str]):
+    """Apply a sharding constraint by logical axes; identity with no rules."""
+    r = current_rules()
+    if r is None or r.mesh is None:
+        return x
+    spec = r.resolve(*logical)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(r.mesh, spec))
+
+
+def named_sharding(*logical: Optional[str]) -> Optional[NamedSharding]:
+    r = current_rules()
+    if r is None or r.mesh is None:
+        return None
+    return NamedSharding(r.mesh, r.resolve(*logical))
+
+
+def model_axis_size() -> int:
+    r = current_rules()
+    if r is None or r.mesh is None or r.model_axis is None:
+        return 1
+    return r.mesh.shape[r.model_axis]
+
+
+def spec_tree_to_shardings(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )

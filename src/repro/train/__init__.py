@@ -1,0 +1,4 @@
+from repro.train.steps import (TrainState, make_train_state, make_train_step,
+                               split_params)
+
+__all__ = ["TrainState", "make_train_state", "make_train_step", "split_params"]

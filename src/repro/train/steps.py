@@ -1,0 +1,144 @@
+"""Train-state and train-step builders (dense baseline + DGSU sparse).
+
+The state is a plain dict pytree (msgpack-serializable for checkpoints):
+
+    {"step", "params_trainable", "params_frozen", "opt", "sel_idx", "rng"}
+
+One compiled train_step serves all three schedule phases: the dynamic phase
+only changes the *values* of sel_idx (int32 data, re-randomized in-graph).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.core import (build_plan, magnitude_selection, random_selection)
+from repro.core.schedule import maybe_reselect
+from repro.core.selection import SelectionPlan
+from repro.core.sparse_update import split_stack
+from repro.models import transformer as T
+from repro.optim import apply_updates, init_opt_state
+
+TrainState = dict  # alias: plain pytree
+
+
+def split_params(params, plan: SelectionPlan):
+    """Split full params into (frozen, trainable) trees per the plan."""
+    frozen: dict = {"segments": {}}
+    trainable: dict = {"segments": {}}
+    for key in params:
+        if key == "segments":
+            continue
+        if plan.update_embeddings and key in ("embed", "lm_head"):
+            trainable[key] = params[key]
+        else:
+            frozen[key] = params[key]
+    for seg_name, stack in params["segments"].items():
+        k = plan.seg_trainable.get(seg_name, 0)
+        f, t = split_stack(stack, k)
+        if f is not None:
+            frozen["segments"][seg_name] = f
+        if t is not None:
+            trainable["segments"][seg_name] = t
+    return frozen, trainable
+
+
+def merge_params(frozen, trainable):
+    """Inverse of split_params (for checkpoint export / eval)."""
+    from repro.core.sparse_update import merge_stack
+    out = {}
+    for tree in (frozen, trainable):
+        for key, val in (tree or {}).items():
+            if key == "segments":
+                continue
+            out[key] = val
+    segs = {}
+    f_segs = (frozen or {}).get("segments", {})
+    t_segs = (trainable or {}).get("segments", {})
+    for name in set(f_segs) | set(t_segs):
+        segs[name] = merge_stack(f_segs.get(name), t_segs.get(name))
+    out["segments"] = segs
+    return out
+
+
+def make_train_state(tc: TrainConfig, key, params=None,
+                     selection_init: str = "magnitude") -> tuple[TrainState, SelectionPlan]:
+    cfg = tc.model
+    kp, ks = jax.random.split(key)
+    if params is None:
+        params = T.init_params(cfg, kp)
+    if tc.sparse.enabled:
+        tokens_per_device = tc.shape.global_batch * tc.shape.seq_len  # 1 host
+        plan = build_plan(cfg, tc.sparse, tokens_per_device)
+        if selection_init == "magnitude":
+            sel_idx = magnitude_selection(plan, params)
+        else:  # "random": trace-friendly (dry-run abstract state)
+            sel_idx = random_selection(plan, kp)
+    else:
+        plan = build_plan(cfg, tc.sparse.__class__(
+            enabled=False, update_ratio=1.0,
+            num_update_layers=10**9, channel_block=tc.sparse.channel_block))
+        sel_idx = None
+    frozen, trainable = split_params(params, plan)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "params_trainable": trainable,
+        "params_frozen": frozen,
+        "opt": init_opt_state(tc.optimizer, trainable),
+        "sel_idx": sel_idx,
+        "rng": ks,
+    }
+    return state, plan
+
+
+def make_train_step(tc: TrainConfig, plan: SelectionPlan,
+                    use_selection: bool = True, donate: bool = True):
+    """Returns a jit-able train_step(state, batch) -> (state, metrics)."""
+    cfg = tc.model
+    remat = tc.remat != "none"
+
+    def train_step(state, batch):
+        step = state["step"]
+        key = jax.random.fold_in(state["rng"], step)
+        sel_idx = state["sel_idx"]
+        if use_selection and tc.sparse.enabled and sel_idx is not None:
+            sel_idx = maybe_reselect(plan, tc.sparse, sel_idx, step, key)
+            sel = (sel_idx, plan.spec)
+        else:
+            sel = None
+
+        def loss_of(trainable):
+            return T.loss_fn(cfg, (state["params_frozen"], trainable), batch,
+                             sel=sel, remat=remat)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(
+            state["params_trainable"])
+        from repro.core.sparse_update import (compact_allreduce_enabled,
+                                              compress_grads)
+        if (compact_allreduce_enabled() and sel is not None
+                and "segments" in grads):
+            from repro.models.specs import param_logical_specs
+            logical = param_logical_specs(cfg).get("segments", {})
+            grads = dict(grads)
+            grads["segments"] = compress_grads(grads["segments"], sel_idx,
+                                               plan.spec, logical)
+        new_params, new_opt = apply_updates(tc.optimizer,
+                                            state["params_trainable"], grads,
+                                            state["opt"], step)
+        new_state = {
+            "step": step + 1,
+            "params_trainable": new_params,
+            "params_frozen": state["params_frozen"],
+            "opt": new_opt,
+            "sel_idx": sel_idx,
+            "rng": state["rng"],
+        }
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        return new_state, metrics
+
+    return train_step

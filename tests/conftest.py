@@ -1,0 +1,7 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: no XLA_FLAGS here on purpose — unit tests run on 1 device.
+# Multi-device tests spawn subprocesses with their own flags.

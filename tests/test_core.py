@@ -1,0 +1,269 @@
+"""Unit + property tests for the paper's core (selection / schedule /
+sparse matmul / memory / pruning / act-prune)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import SparseUpdateConfig, get_smoke_config
+from repro.core.act_prune import block_act_prune, block_sparsity
+from repro.core.schedule import coverage_after, maybe_reselect, phase_of
+from repro.core.selection import (build_plan, magnitude_selection,
+                                  random_selection, selected_fraction)
+from repro.core.sparse_update import SelSpec, merge_stack, smm, split_stack
+
+
+# ---------------------------------------------------------------------------
+# sparse matmul (the paper's gradient skip)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 6).map(lambda i: i * 4),
+    k=st.integers(1, 6).map(lambda i: i * 4),
+    n_shards=st.sampled_from([1, 2, 4]),
+    n_blocks=st.integers(2, 6),
+    block=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_smm_grad_matches_masked_dense(m, k, n_shards, n_blocks, block, seed):
+    """Property: smm gradient == dense gradient * channel mask, dx dense."""
+    rng = np.random.default_rng(seed)
+    n = n_shards * n_blocks * block
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    n_sel = rng.integers(1, n_blocks + 1)
+    idx = jnp.asarray(
+        np.stack([rng.choice(n_blocks, n_sel, replace=False)
+                  for _ in range(n_shards)]), jnp.int32)
+    spec = SelSpec(block=block, n_shards=n_shards, n_sel=int(n_sel),
+                   n_blocks=n_blocks)
+    sel = ({"w": idx}, {"w": spec})
+
+    g = jax.grad(lambda w: (smm(x, w, sel, "w") ** 2).sum())(w)
+    gd = jax.grad(lambda w: (jnp.matmul(x, w) ** 2).sum())(w)
+    mask = np.zeros((n_shards, n_blocks))
+    for s in range(n_shards):
+        mask[s, np.asarray(idx[s])] = 1
+    mask = np.repeat(mask.reshape(-1), block)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gd) * mask,
+                               rtol=1e-4, atol=1e-4)
+    # forward value unchanged
+    np.testing.assert_allclose(np.asarray(smm(x, w, sel, "w")),
+                               np.asarray(x @ w), rtol=1e-5, atol=1e-5)
+    # dx stays dense-correct
+    gx = jax.grad(lambda x: smm(x, w, sel, "w").sum())(x)
+    gxd = jax.grad(lambda x: (x @ w).sum())(x)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(gxd),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_split_merge_roundtrip():
+    stack = {"a": jnp.arange(24.0).reshape(6, 4), "b": jnp.ones((6, 2))}
+    f, t = split_stack(stack, 2)
+    assert t["a"].shape == (2, 4) and f["a"].shape == (4, 4)
+    merged = merge_stack(f, t)
+    np.testing.assert_array_equal(np.asarray(merged["a"]),
+                                  np.asarray(stack["a"]))
+    f0, t0 = split_stack(stack, 0)
+    assert t0 is None
+    fall, tall = split_stack(stack, 6)
+    assert fall is None
+
+
+# ---------------------------------------------------------------------------
+# selection plan
+# ---------------------------------------------------------------------------
+
+def _plan(ratio=0.25, k=2):
+    cfg = get_smoke_config("llama3-8b")
+    sp = SparseUpdateConfig(update_ratio=ratio, num_update_layers=k,
+                            channel_block=16)
+    return cfg, sp, build_plan(cfg, sp)
+
+
+def test_plan_later_layers_first():
+    cfg, sp, plan = _plan()
+    assert plan.seg_trainable == {"blocks": 2}
+    assert 0 < selected_fraction(plan, cfg) < 1
+
+
+def test_random_selection_valid_and_unique():
+    cfg, sp, plan = _plan()
+    idx = random_selection(plan, jax.random.PRNGKey(0))
+    for path, leaf in jax.tree_util.tree_leaves_with_path(idx):
+        arr = np.asarray(leaf)
+        assert arr.min() >= 0
+        # unique per (step, shard)
+        flat = arr.reshape(-1, arr.shape[-1])
+        for row in flat:
+            assert len(set(row.tolist())) == len(row)
+
+
+def test_magnitude_selection_picks_largest_blocks():
+    cfg, sp, plan = _plan(ratio=0.25, k=1)
+    from repro.models import transformer as T
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    # boost one block of wq in the last layer; it must be selected
+    spec = plan.spec["blocks"]["attn"]["wq"]
+    wq = params["segments"]["blocks"]["attn"]["wq"]
+    boosted = wq.at[-1, :, 3 * spec.block:4 * spec.block].mul(100.0)
+    params["segments"]["blocks"]["attn"]["wq"] = boosted
+    idx = magnitude_selection(plan, params)
+    sel_blocks = np.asarray(idx["blocks"]["attn"]["wq"])[-1, 0]
+    assert 3 in sel_blocks.tolist()
+
+
+def test_phases_and_reselect():
+    sp = SparseUpdateConfig(update_ratio=0.5, num_update_layers=1,
+                            channel_block=16, phase_fixed_early=5,
+                            phase_dynamic=10, phase_fixed_late=5)
+    assert phase_of(0, sp) == 0
+    assert phase_of(5, sp) == 1
+    assert phase_of(14, sp) == 1
+    assert phase_of(15, sp) == 2
+    cfg = get_smoke_config("llama3-8b")
+    plan = build_plan(cfg, sp)
+    idx0 = random_selection(plan, jax.random.PRNGKey(1))
+    key = jax.random.PRNGKey(2)
+    same = lambda a, b: jax.tree.all(
+        jax.tree.map(lambda x, y: bool((x == y).all()), a, b))
+    assert same(idx0, maybe_reselect(plan, sp, idx0, jnp.asarray(0), key))
+    assert not same(idx0, maybe_reselect(plan, sp, idx0, jnp.asarray(7), key))
+    assert same(idx0, maybe_reselect(plan, sp, idx0, jnp.asarray(16), key))
+
+
+@settings(max_examples=10, deadline=None)
+@given(steps=st.integers(0, 200))
+def test_coverage_monotone_in_dynamic_steps(steps):
+    cfg, sp_, plan = _plan()
+    sp = SparseUpdateConfig(update_ratio=0.25, num_update_layers=2,
+                            channel_block=16, phase_fixed_early=5,
+                            phase_dynamic=1000)
+    c1 = coverage_after(plan, sp, steps, None)
+    c2 = coverage_after(plan, sp, steps + 10, None)
+    assert 0.0 <= c1 <= c2 <= 1.0 + 1e-9
+
+
+def test_coverage_dynamic_beats_fixed():
+    """Paper Fig. 4: dynamic traverses far more parameters over time."""
+    cfg, _, plan = _plan(ratio=0.2)
+    fixed = SparseUpdateConfig(update_ratio=0.2, num_update_layers=2,
+                               channel_block=16, phase_fixed_early=10**6,
+                               phase_dynamic=0)
+    dyn = SparseUpdateConfig(update_ratio=0.2, num_update_layers=2,
+                             channel_block=16, phase_fixed_early=10,
+                             phase_dynamic=40)
+    c_fixed = coverage_after(plan, fixed, 50, None)
+    c_dyn = coverage_after(plan, dyn, 50, None)
+    assert c_dyn > 2 * c_fixed
+
+
+# ---------------------------------------------------------------------------
+# memory model / budget solver
+# ---------------------------------------------------------------------------
+
+def test_budget_solver_fits_budget():
+    from repro.core import memory as mem
+    cfg = get_smoke_config("llama3-8b")
+    tokens = 8 * 64
+    for budget_kb in (64, 256, 1024, 16384):
+        sp = SparseUpdateConfig(update_ratio=0.2, channel_block=16,
+                                memory_budget_bytes=budget_kb * 1024)
+        k = mem.solve_max_layers(cfg, sp, tokens)
+        assert k >= 1
+        if k > 1:
+            assert mem.training_extra_bytes(cfg, sp, k, tokens) <= sp.memory_budget_bytes
+
+
+def test_sparse_much_smaller_than_dense():
+    """The paper's headline: sparse update cuts the training footprint by
+    ~10x at the same model (Table II: 2.5MB -> 0.25MB)."""
+    from repro.core import memory as mem
+    cfg = get_smoke_config("llama3-8b")
+    sp = SparseUpdateConfig(update_ratio=0.2, channel_block=16)
+    tokens = 8 * 64
+    sparse = mem.training_extra_bytes(cfg, sp, 1, tokens)
+    dense = mem.dense_training_extra_bytes(cfg, tokens)
+    assert sparse * 4 < dense
+
+
+# ---------------------------------------------------------------------------
+# block activation pruning
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(1, 8),
+    cols=st.integers(1, 16).map(lambda i: i * 2),
+    thr=st.floats(0.01, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_act_prune_properties(rows, cols, thr, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(rows, cols)), jnp.float32)
+    y = block_act_prune(x, thr, 2)
+    yb = np.asarray(y).reshape(rows, cols // 2, 2)
+    xb = np.asarray(x).reshape(rows, cols // 2, 2)
+    blk_max = np.abs(xb).max(-1)
+    # pruned blocks exactly zero; kept blocks untouched
+    assert (yb[blk_max < thr] == 0).all()
+    np.testing.assert_array_equal(yb[blk_max >= thr], xb[blk_max >= thr])
+    # idempotent
+    np.testing.assert_array_equal(np.asarray(block_act_prune(y, thr, 2)),
+                                  np.asarray(y))
+
+
+def test_act_prune_sparsity_monotone():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(64, 64)) * 0.3,
+                    jnp.float32)
+    s = [float(block_sparsity(x, t, 2)) for t in (0.05, 0.15, 0.5, 1.5)]
+    assert s == sorted(s)
+    assert s[-1] > 0.9
+
+
+# ---------------------------------------------------------------------------
+# pruning (CNN path)
+# ---------------------------------------------------------------------------
+
+def test_pruning_pipeline_sparsity_and_consistency():
+    from repro.configs.mobilenetv2_cifar import smoke_config
+    from repro.core import pruning
+    from repro.models import mobilenet_v2 as MN
+    cfg = smoke_config()
+    params = MN.init_params(cfg, jax.random.PRNGKey(0))
+    pruned, report = pruning.full_prune(params, cfg, channel_target=0.4,
+                                        unstructured_rate=0.5)
+    assert 0.3 < report["conv_sparsity"] < 0.99
+    # dependency consistency: a pruned hidden channel is zero across the group
+    masks = pruning.channel_prune_masks(params, cfg, 0.4)
+    blk = pruned["b1"]
+    keep = np.asarray(masks["b1"])
+    dead = np.where(~keep)[0]
+    if len(dead):
+        assert np.all(np.asarray(blk["dw"]["w"])[..., dead] == 0)
+        assert np.all(np.asarray(blk["project"]["w"])[:, :, dead, :] == 0)
+        if "expand" in blk:
+            assert np.all(np.asarray(blk["expand"]["w"])[..., dead] == 0)
+    # forward still finite
+    imgs = jnp.asarray(np.random.default_rng(0).normal(
+        size=(2, cfg.img_size, cfg.img_size, 3)), jnp.float32)
+    logits = MN.forward(cfg, (pruned, None), imgs)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_pattern_prune_keeps_4_entries():
+    from repro.core.pruning import pattern_prune_kernel
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(3, 3, 4, 8)),
+                    jnp.float32)
+    mask = np.asarray(pattern_prune_kernel(w))
+    per_filter = mask.reshape(9, -1).sum(0)
+    assert (per_filter == 4).all()
+
+
+def test_kd_loss_zero_when_equal():
+    from repro.core.distill import kd_loss
+    logits = jnp.asarray(np.random.default_rng(0).normal(size=(4, 10)),
+                         jnp.float32)
+    assert abs(float(kd_loss(logits, logits))) < 1e-5
