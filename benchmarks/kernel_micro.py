@@ -1,6 +1,8 @@
 """Kernel microbenchmarks: jnp oracle vs Pallas(interpret) wall time on CPU
 (correctness-path timing only — TPU timing requires hardware), plus the
-compute-skip ratio the block-sparse dW kernel achieves by construction."""
+compute-skip ratio the block-sparse dW kernel achieves by construction, and
+a dense-scatter vs compact-gradient train-step comparison (step time and
+compiler-reported peak temp memory)."""
 from __future__ import annotations
 
 import time
@@ -38,6 +40,54 @@ def run() -> list[tuple]:
     # dense dW for comparison
     jd = jax.jit(lambda x, dy: jnp.einsum("mk,mn->kn", x, dy))
     rows.append(("kernel/dense_dw", _time(jd, x, dy), "baseline"))
+    rows += train_step_comparison()
+    return rows
+
+
+def train_step_comparison() -> list[tuple]:
+    """Dense-scatter vs compact-gradient jitted train step on the llama3
+    smoke config: per-step wall time plus the compiler's temp-allocation
+    estimate (the buffer class holding gradient scratch)."""
+    from repro.configs import (OptimizerConfig, ShapeConfig,
+                               SparseUpdateConfig, TrainConfig,
+                               get_smoke_config)
+    from repro.train import make_train_state, make_train_step
+
+    cfg = get_smoke_config("llama3-8b")
+    shape = ShapeConfig("bench", 64, 8, "train")
+    tc = TrainConfig(
+        model=cfg, shape=shape,
+        sparse=SparseUpdateConfig(update_ratio=0.25, num_update_layers=2,
+                                  channel_block=8),
+        optimizer=OptimizerConfig(kind="momentum", momentum=0.9,
+                                  learning_rate=0.05))
+    state, plan = make_train_state(tc, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1),
+                                          (shape.global_batch, shape.seq_len),
+                                          0, cfg.vocab_size),
+             "labels": jax.random.randint(jax.random.PRNGKey(2),
+                                          (shape.global_batch, shape.seq_len),
+                                          0, cfg.vocab_size)}
+    rows = []
+    for label, compact in (("dense_scatter", False), ("compact", True)):
+        step = jax.jit(make_train_step(tc, plan, compact_grads=compact))
+        # compile once (AOT) and run the compiled executable directly
+        compiled = step.lower(state, batch).compile()
+        try:
+            mem = compiled.memory_analysis()
+            temp = int(getattr(mem, "temp_size_in_bytes", 0))
+        except Exception:
+            temp = 0
+        s, m = compiled(state, batch)      # warm up
+        jax.block_until_ready(jax.tree.leaves(s))
+        t0 = time.perf_counter()
+        n = 5
+        for _ in range(n):
+            s, m = compiled(s, batch)
+        jax.block_until_ready(jax.tree.leaves(s))
+        us = (time.perf_counter() - t0) / n * 1e6
+        rows.append((f"train_step/{label}", us,
+                     f"temp_bytes={temp};loss={float(m['loss']):.4f}"))
     return rows
 
 

@@ -10,6 +10,8 @@ from __future__ import annotations
 
 import time
 
+import zlib
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -79,7 +81,8 @@ def _selection(cfg, params, ratio, last_k, key, magnitude=True):
             norms = np.asarray(jnp.abs(w).reshape(-1, nb, block).sum((0, 2)))
             sel = np.argsort(-norms)[:ns]
         else:
-            sel = jax.random.choice(jax.random.fold_in(key, hash(name) % 2**31),
+            sel = jax.random.choice(
+                jax.random.fold_in(key, zlib.crc32(name.encode()) % 2**31),
                                     nb, (ns,), replace=False)
         idx[name] = jnp.asarray(sel, jnp.int32)[None, :]
     return idx, spec

@@ -25,9 +25,30 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:          # offline images may lack zstd; fall back to zlib
+    zstandard = None
+import zlib
 
 _CKPT_RE = re.compile(r"step_(\d+)\.ckpt$")
+_ZLIB_MAGIC = b"ZLB0"        # our zlib-frame marker (zstd frames start 0x28b52ffd)
+
+
+def _compress(raw: bytes) -> bytes:
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=3).compress(raw)
+    return _ZLIB_MAGIC + zlib.compress(raw, 6)
+
+
+def _decompress(blob: bytes) -> bytes:
+    if blob.startswith(_ZLIB_MAGIC):
+        return zlib.decompress(blob[len(_ZLIB_MAGIC):])
+    if zstandard is None:
+        raise RuntimeError("checkpoint is zstd-compressed but the zstandard "
+                           "module is not installed")
+    return zstandard.ZstdDecompressor().decompress(blob)
 
 
 def _flatten(tree) -> dict[str, Any]:
@@ -47,7 +68,7 @@ def save_pytree(path: str, tree, meta: Optional[dict] = None):
         payload[key] = {"d": str(arr.dtype), "s": list(arr.shape),
                         "b": arr.tobytes()}
     raw = msgpack.packb(payload, use_bin_type=True)
-    comp = zstandard.ZstdCompressor(level=3).compress(raw)
+    comp = _compress(raw)
     tmp = path + f".tmp.{os.getpid()}"
     with open(tmp, "wb") as f:
         f.write(comp)
@@ -62,7 +83,7 @@ def load_pytree(path: str, target=None, shardings=None):
     device_put with `shardings` (same-structure tree or None) — this is the
     elastic reshard path."""
     with open(path, "rb") as f:
-        raw = zstandard.ZstdDecompressor().decompress(f.read())
+        raw = _decompress(f.read())
     payload = msgpack.unpackb(raw, raw=False)
     meta = payload.pop("__meta__", {})
     arrays = {}

@@ -1,0 +1,53 @@
+"""Version compatibility for the jax APIs this repo relies on.
+
+The codebase targets the modern jax surface (`jax.make_mesh(axis_types=...)`,
+`jax.shard_map`, `pallas.tpu.CompilerParams`); the pinned toolchain may ship
+an older jax where those names live elsewhere or take different kwargs. All
+version probing lives here so call sites stay on the modern spelling.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
+    """`jax.make_mesh` with explicit-Auto axis types where supported."""
+    try:
+        return jax.make_mesh(
+            tuple(axis_shapes), tuple(axis_names),
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names))
+    except (AttributeError, TypeError):
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: Optional[bool] = None):
+    """`jax.shard_map` (new) or `jax.experimental.shard_map.shard_map` (old).
+
+    `check_vma` (new name) maps onto `check_rep` (old name)."""
+    if hasattr(jax, "shard_map"):
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)
+
+
+def cost_analysis(compiled) -> dict:
+    """`compiled.cost_analysis()` as a dict — newer jax returns the dict
+    directly, older jax wraps it in a one-element list (per device)."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
+def pallas_compiler_params(**kwargs):
+    """`pltpu.CompilerParams` (new) / `pltpu.TPUCompilerParams` (old)."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams")
+    return cls(**kwargs)

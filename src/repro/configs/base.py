@@ -209,6 +209,10 @@ class TrainConfig:
     checkpoint_dir: str = ""
     keep_checkpoints: int = 3
     remat: str = "selected"            # none | selected | full
+    # compact-gradient path: thread the compact per-block dW through
+    # clipping/optimizer/update without ever scattering a full-shape dW
+    # (core.sparse_update docstring has the equivalence guarantees)
+    compact_grads: bool = False
     seed: int = 0
 
 

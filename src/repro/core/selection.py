@@ -12,6 +12,7 @@ rule as TP load balance).
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from dataclasses import dataclass
 from typing import Any, Optional
 
@@ -150,7 +151,10 @@ def random_selection(plan: SelectionPlan, key) -> dict:
             continue
         leaves, treedef = jax.tree_util.tree_flatten(
             plan.spec[seg_name], is_leaf=lambda x: isinstance(x, SelSpec))
-        keys = jax.random.split(jax.random.fold_in(key, hash(seg_name) % 2**31),
+        # stable across processes (builtin hash() varies with PYTHONHASHSEED,
+        # which would break checkpoint-resume selection determinism)
+        seg_salt = zlib.crc32(seg_name.encode()) % 2**31
+        keys = jax.random.split(jax.random.fold_in(key, seg_salt),
                                 max(1, len(leaves)))
         idx_leaves = [_rand_idx(k, steps, sp) for k, sp in zip(keys, leaves)]
         idx[seg_name] = jax.tree_util.tree_unflatten(treedef, idx_leaves)

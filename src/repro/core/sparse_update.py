@@ -23,6 +23,46 @@ Selection layout: for a weight with output dim N sharded over `n_shards` TP
 shards, `idx` has shape [n_shards, n_sel] holding block indices *local to
 each shard* — every shard updates the same number of blocks (the paper's
 equal-sparsity-per-PE rule, reborn as TP load balance).
+
+Compact-gradient path (`compact_grads=True` in the train step)
+--------------------------------------------------------------
+The dense-scatter path above still materializes a full-shape dW per weight
+(`_scatter_blocks` writes the compact blocks into a [K, N] zero buffer) and
+the optimizer then sweeps the whole tensor. The compact path never leaves
+the [*, n_shards, n_sel, block] layout:
+
+1. `gather_param_blocks` pulls the selected blocks of each selectable leaf
+   into a compact `w_sel` companion tensor; the train step differentiates
+   w.r.t. `w_sel` while the full weight enters the forward matmul with its
+   gradient stopped.
+2. `_smm_compact` / `_smm_batched_compact` compute the identical forward
+   `x @ w` but their VJP emits the compact `compact_dw` result directly as
+   the cotangent of `w_sel` — no zero buffer, no full-shape scatter.
+3. `repro.optim.apply_updates_mixed` clips, applies the SGD/momentum/AdamW
+   rule on the gathered blocks (gathering the matching optimizer-state
+   blocks), and writes the result back with `scatter_param_blocks` (or the
+   Pallas `kernels.scatter_blocks` in-place kernel under `use_kernels`).
+
+Equivalence guarantees vs the dense-scatter path:
+
+- SGD (momentum 0, no weight decay): bitwise identical — the dense path's
+  update is the identity outside the selection and performs the exact same
+  fp32 arithmetic inside it (`gather(scatter(dw_sel)) == dw_sel`, and the
+  fp32->param-dtype cast round-trips untouched values).
+- momentum / AdamW with a FIXED selection (phase 0/2 of Algorithm 1, or any
+  window without reselection): identical, because optimizer state outside
+  the selection stays zero in the dense sweep and untouched in the compact
+  path.
+- Under dynamic reselection the compact path implements the documented
+  "stale state frozen" semantics exactly: deselected blocks keep their
+  momentum frozen and their weights fixed. The dense sweep instead lets
+  stale momentum keep decaying *and moving* deselected weights — an
+  artifact of the sweep, not a property of the algorithm.
+- `grad_clip > 0` changes the reduction shape of the global-norm sum, so
+  equality holds to float-accumulation order (allclose, not bitwise).
+- Weight decay in the compact path touches only selected blocks (the
+  paper's "2% of weights updated per step" discipline); the dense sweep
+  decays every weight.
 """
 from __future__ import annotations
 
@@ -196,21 +236,56 @@ def _smm_bwd(spec: SelSpec, res, dy):
 _smm.defvjp(_smm_fwd, _smm_bwd)
 
 
+# compact-VJP variant: same forward, but the weight gradient comes out as
+# the compact [K, n_shards, n_sel, block] cotangent of `w_sel` (the gathered
+# selected blocks) — nothing full-shape is ever scattered. The caller passes
+# `w` with its gradient stopped; its (zero) cotangent is DCE'd by XLA.
+
+@partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _smm_compact(x, w, w_sel, idx, spec: SelSpec):
+    return jnp.matmul(x, w)
+
+
+def _smm_compact_fwd(x, w, w_sel, idx, spec: SelSpec):
+    return jnp.matmul(x, w), (x, w, idx)
+
+
+def _smm_compact_bwd(spec: SelSpec, res, dy):
+    x, w, idx = res
+    k, n = w.shape[-2], w.shape[-1]
+    dx = jnp.matmul(dy, jnp.swapaxes(w, -1, -2))
+    dw_sel = compact_dw(x.reshape(-1, k), dy.reshape(-1, n), idx, spec)
+    return (dx.astype(x.dtype), jnp.zeros_like(w),
+            dw_sel.astype(w.dtype), None)
+
+
+_smm_compact.defvjp(_smm_compact_fwd, _smm_compact_bwd)
+
+
 def smm(x, w, sel, name: str):
     """Sparse matmul: `x @ w` with channel-block-sparse dW.
 
-    sel: None (dense backward) or a pair (idx_dict, spec_dict) where
-    idx_dict[name] is int32 [n_shards, n_sel] and spec_dict[name] a SelSpec.
-    Weights absent from the dicts fall back to dense backward.
+    sel: None (dense backward), a pair (idx_dict, spec_dict), or a triple
+    (idx_dict, spec_dict, wsel_dict). idx_dict[name] is int32
+    [n_shards, n_sel], spec_dict[name] a SelSpec. With a triple, the VJP is
+    COMPACT: the gradient flows to wsel_dict[name] (the gathered selected
+    blocks) instead of being scattered into a full-shape dW. Weights absent
+    from the dicts fall back to dense backward.
     """
     if sel is None:
         return jnp.matmul(x, w)
-    idx_dict, spec_dict = sel
+    idx_dict, spec_dict = sel[0], sel[1]
     if idx_dict is None or name not in idx_dict:
         return jnp.matmul(x, w)
+    idx, spec = idx_dict[name], spec_dict[name]
+    wsel_dict = sel[2] if len(sel) > 2 else None
+    if wsel_dict is not None and name in wsel_dict:
+        if w.ndim == 2:
+            return _smm_compact(x, w, wsel_dict[name], idx, spec)
+        return _smm_batched_compact(x, w, wsel_dict[name], idx, spec)
     if w.ndim == 2:
-        return _smm(x, w, idx_dict[name], spec_dict[name])
-    return _smm_batched(x, w, idx_dict[name], spec_dict[name])
+        return _smm(x, w, idx, spec)
+    return _smm_batched(x, w, idx, spec)
 
 
 # batched (expert) variant: x [E, C, K], w [E, K, N]
@@ -241,6 +316,103 @@ def _smmb_bwd(spec: SelSpec, res, dy):
 
 
 _smm_batched.defvjp(_smmb_fwd, _smmb_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _smm_batched_compact(x, w, w_sel, idx, spec: SelSpec):
+    return jnp.einsum("eck,ekn->ecn", x, w)
+
+
+def _smmbc_fwd(x, w, w_sel, idx, spec):
+    return jnp.einsum("eck,ekn->ecn", x, w), (x, w, idx)
+
+
+def _smmbc_bwd(spec: SelSpec, res, dy):
+    x, w, idx = res
+    e, c, k = x.shape
+    dx = jnp.einsum("ecn,ekn->eck", dy, w)
+    dyb = dy.reshape(e, c, spec.n_shards, spec.n_blocks, spec.block)
+    dy_sel = jnp.take_along_axis(dyb, idx[None, None, :, :, None], axis=3)
+    dw_sel = jnp.einsum("eck,ecsnb->eksnb", x, dy_sel,
+                        preferred_element_type=jnp.float32)
+    return (dx.astype(x.dtype), jnp.zeros_like(w),
+            dw_sel.astype(w.dtype), None)
+
+
+_smm_batched_compact.defvjp(_smmbc_fwd, _smmbc_bwd)
+
+
+# ---------------------------------------------------------------------------
+# compact-path block gather/scatter (params and optimizer state)
+# ---------------------------------------------------------------------------
+
+def _block_idx(idx, spec: SelSpec, lead: tuple, k: int):
+    """Broadcast [K, n_shards, n_sel] indices into the blocked-leaf layout."""
+    bidx = idx.reshape((k,) + (1,) * len(lead)
+                       + (spec.n_shards, spec.n_sel, 1))
+    return jnp.broadcast_to(
+        bidx, (k,) + lead + (spec.n_shards, spec.n_sel, spec.block))
+
+
+def gather_param_blocks(w, idx, spec: SelSpec):
+    """Stacked leaf [K, *lead, N] -> compact [K, *lead, n_shards, n_sel,
+    block] of the selected blocks. idx: [K, n_shards, n_sel]."""
+    k = w.shape[0]
+    lead = w.shape[1:-1]
+    wb = w.reshape((k,) + lead + (spec.n_shards, spec.n_blocks, spec.block))
+    return jnp.take_along_axis(wb, _block_idx(idx, spec, lead, k),
+                               axis=len(lead) + 2)
+
+
+def scatter_param_blocks(w, vals, idx, spec: SelSpec):
+    """Inverse write of gather_param_blocks: overwrite the selected blocks of
+    `w` with `vals` (unselected blocks untouched — the operand is the live
+    tensor, NOT a zero buffer). Routes to the Pallas in-place kernel under
+    `use_kernels`."""
+    if kernels_enabled():
+        from repro.kernels import ops as kops
+        return kops.block_scatter_update(w, vals.astype(w.dtype), idx, spec)
+    k = w.shape[0]
+    lead = w.shape[1:-1]
+    wb = w.reshape((k,) + lead + (spec.n_shards, spec.n_blocks, spec.block))
+    out = jnp.put_along_axis(wb, _block_idx(idx, spec, lead, k),
+                             vals.astype(w.dtype), axis=len(lead) + 2,
+                             inplace=False)
+    return out.reshape(w.shape)
+
+
+def map_selectable(tree, spec_tree, fn):
+    """Apply `fn` to every leaf of `tree` that has a SelSpec in `spec_tree`
+    (matched positionally); other leaves pass through unchanged. Works on
+    the trainable tree: spec_tree is keyed {"segments": {seg: {leaf: ...}}}
+    style via plan.spec — pass `{"segments": plan.spec}`-shaped trees."""
+    def walk(node, spec):
+        if isinstance(spec, SelSpec):
+            return fn(node)
+        if isinstance(node, dict):
+            return {key: (walk(val, spec[key])
+                          if isinstance(spec, dict) and key in spec else val)
+                    for key, val in node.items()}
+        return node
+    return walk(tree, spec_tree)
+
+
+def gather_selected_tree(segments, idx_tree, spec_tree):
+    """Compact companion tree for the trainable segments: for each SelSpec
+    leaf, the gathered selected blocks; segments without selection map to
+    None. segments/idx_tree/spec_tree are keyed by segment name."""
+    def walk(stack, idx, spec):
+        if isinstance(spec, SelSpec):
+            return gather_param_blocks(stack, idx, spec)
+        return {key: walk(stack[key], idx[key], spec[key]) for key in spec}
+
+    out = {}
+    for seg, spec in spec_tree.items():
+        if idx_tree.get(seg) is None or seg not in segments or not spec:
+            out[seg] = None
+            continue
+        out[seg] = walk(segments[seg], idx_tree[seg], spec)
+    return out
 
 
 # ---------------------------------------------------------------------------

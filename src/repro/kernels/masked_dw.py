@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import pallas_compiler_params
+
 
 def _kernel(idx_ref, x_ref, dy_ref, out_ref, acc_ref, *, n_m: int):
     mi = pl.program_id(2)
@@ -73,7 +75,7 @@ def block_sparse_dw_kernel(x, dy, idx, *, block: int, tm: int = 128,
             scratch_shapes=[pltpu.VMEM((block, tk), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((n_sel, block, k), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(idx, x, dy)

@@ -39,6 +39,35 @@ def block_sparse_dw(x2, dy2, idx, spec):
     return jnp.transpose(stacked, (3, 0, 1, 2))   # [K, n_shards, n_sel, block]
 
 
+def block_scatter_update(w, vals, idx, spec):
+    """Compact-path weight writeback (see core.sparse_update): overwrite the
+    selected blocks of a stacked leaf with their updated values.
+
+    w:    [K, *lead, N]                 (N = n_shards * n_blocks * block)
+    vals: [K, *lead, n_shards, n_sel, block]
+    idx:  [K, n_shards, n_sel]
+    """
+    from repro.kernels.scatter_blocks import block_scatter_update_kernel
+
+    k = w.shape[0]
+    lead = w.shape[1:-1]
+    r = 1
+    for d in lead:
+        r *= d
+    tr = r if r < 256 else max(d for d in (256, 128, 64, 32, 16, 8, 4, 2, 1)
+                               if r % d == 0)
+    loc = spec.n_blocks * spec.block
+    outs = []
+    for kk in range(k):       # K (trainable steps) and shards are tiny loops
+        wk = w[kk].reshape(r, spec.n_shards, loc)
+        vk = vals[kk].reshape(r, spec.n_shards, spec.n_sel, spec.block)
+        shards = [block_scatter_update_kernel(wk[:, s], vk[:, s], idx[kk, s],
+                                              tr=tr, interpret=_interpret())
+                  for s in range(spec.n_shards)]
+        outs.append(jnp.stack(shards, axis=1).reshape(w.shape[1:]))
+    return jnp.stack(outs, axis=0)
+
+
 def block_act_prune(x, threshold: float = 0.15, block: int = 2):
     shape = x.shape
     x2 = x.reshape(-1, shape[-1])

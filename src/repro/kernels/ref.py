@@ -14,6 +14,15 @@ def block_sparse_dw_ref(x, dy, idx, block: int):
                       x.astype(jnp.float32))
 
 
+def block_scatter_update_ref(w, upd, idx, block: int):
+    """w: [R,N], upd: [R,n_sel,block], idx: [n_sel] -> w with the selected
+    blocks overwritten (unselected columns untouched)."""
+    r, n = w.shape
+    wb = w.reshape(r, n // block, block)
+    out = wb.at[:, idx, :].set(upd.astype(w.dtype))
+    return out.reshape(r, n)
+
+
 def block_act_prune_ref(x, threshold: float = 0.15, block: int = 2):
     c = x.shape[-1]
     xb = x.reshape(x.shape[:-1] + (c // block, block))

@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: in-place block scatter-update for the compact path.
+
+The compact-gradient train step updates only the selected output-channel
+blocks of each weight; this kernel writes those updated blocks back into
+the full weight WITHOUT sweeping (or even reading) the unselected columns.
+The weight input is aliased to the output (`input_output_aliases`), so on
+TPU the update is a true in-place write touching n_sel/n_blocks of the
+tensor — HBM traffic proportional to the selection ratio, the memory-side
+twin of `masked_dw`'s compute skip.
+
+    w:   [R, N]              full weight, rows = flattened non-out dims
+    upd: [R, n_sel, block]   updated values for the selected blocks
+    idx: [n_sel]             selected block indices (N = n_blocks * block)
+    out: [R, N]              w with out[:, idx[s]] block <- upd[:, s]
+
+Grid: (n_sel, R/TR); the scalar-prefetched idx routes each grid step's
+output block straight to its selected column block. If idx contains
+duplicates the highest grid step wins (grid dim 0 is "arbitrary", i.e.
+sequential) — selection never produces duplicates within a shard.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat import pallas_compiler_params
+
+
+def _kernel(idx_ref, w_ref, upd_ref, out_ref):
+    del idx_ref, w_ref
+    out_ref[...] = upd_ref[:, 0, :].astype(out_ref.dtype)
+
+
+def block_scatter_update_kernel(w, upd, idx, *, tr: int = 256,
+                                interpret: bool = False):
+    """out = w with blocks idx overwritten by upd. Shapes as module doc."""
+    r, n = w.shape
+    n_sel, block = upd.shape[1], upd.shape[2]
+    assert n % block == 0 and upd.shape[0] == r and idx.shape == (n_sel,)
+    tr = min(tr, r)
+    assert r % tr == 0
+
+    grid = (n_sel, r // tr)
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((tr, block), lambda si, ri, idx_ref:
+                             (ri, idx_ref[si])),
+                pl.BlockSpec((tr, 1, block), lambda si, ri, idx_ref:
+                             (ri, si, 0)),
+            ],
+            out_specs=pl.BlockSpec((tr, block), lambda si, ri, idx_ref:
+                                   (ri, idx_ref[si])),
+        ),
+        out_shape=jax.ShapeDtypeStruct((r, n), w.dtype),
+        input_output_aliases={1: 0},   # w aliases out: unselected blocks kept
+        compiler_params=pallas_compiler_params(
+            dimension_semantics=("arbitrary", "parallel")),
+        interpret=interpret,
+    )(idx, w, upd)

@@ -66,10 +66,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
 
     t0 = time.time()
     if mesh_shape is not None:
-        import jax as _jax
-        mesh = _jax.make_mesh(tuple(mesh_shape), ("data", "model"),
-                              axis_types=(_jax.sharding.AxisType.Auto,)
-                              * len(mesh_shape))
+        from repro.compat import make_mesh
+        mesh = make_mesh(tuple(mesh_shape), ("data", "model"))
     else:
         mesh = make_production_mesh(multi_pod=multi_pod)
     rules = rules_for(mesh, cfg, shape)
@@ -110,7 +108,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
 
         mem = compiled.memory_analysis()
         rec["memory"] = _mem_dict(mem)
-        cost = compiled.cost_analysis() or {}
+        from repro.compat import cost_analysis
+        cost = cost_analysis(compiled)
         rec["hlo_flops_body_once"] = float(cost.get("flops", 0.0))
         rec["hlo_bytes_body_once"] = float(cost.get("bytes accessed", 0.0))
         txt = compiled.as_text()

@@ -233,6 +233,126 @@ def collective_bytes(text: str) -> dict:
             "naive": int(naive)}
 
 
+# ---------------------------------------------------------------------------
+# zero-init scatter detection (compact-gradient path verification)
+# ---------------------------------------------------------------------------
+#
+# The dense-scatter backward materializes each block-sparse dW by scattering
+# the compact blocks into a ZERO buffer (`jnp.put_along_axis(zeros, ...)`),
+# which lowers to a stablehlo.scatter whose operand is a broadcast zero
+# constant. The compact path's only scatters write updated blocks into LIVE
+# tensors (weights / optimizer state). `zero_init_scatters` finds the former
+# in jax's StableHLO lowering text (`jax.jit(f).lower(...).as_text()`),
+# resolving scatter operands one call level deep (jax outlines
+# put_along_axis into private helper funcs whose operand arrives as an
+# argument).
+
+_SHLO_FUNC_RE = re.compile(r"func\.func\s+(?:private\s+)?@([\w.\-$]+)\((.*)$")
+_SHLO_ZERO_RE = re.compile(
+    r"(%[\w#]+)\s*=\s*stablehlo\.constant\s+dense<0(?:\.0*(?:e[+-]?\d+)?)?>")
+_SHLO_PROP_RE = re.compile(
+    r"(%[\w#]+)\s*=\s*stablehlo\.(?:broadcast_in_dim|reshape|convert|"
+    r"transpose)\s+(%[\w#]+)")
+_SHLO_SCATTER_RE = re.compile(r'"stablehlo\.scatter"\(([^)]*)\)')
+_SHLO_CALL_RE = re.compile(r"=\s*call\s+@([\w.\-$]+)\(([^)]*)\)")
+_SHLO_TENSOR_RE = re.compile(r"tensor<([0-9x]*)x?([a-z][\w]*)>")
+
+
+def _shlo_tensor(type_str: str):
+    m = _SHLO_TENSOR_RE.search(type_str)
+    if not m:
+        return None
+    dims = tuple(int(d) for d in m.group(1).split("x") if d) \
+        if m.group(1) else ()
+    return dims, m.group(2)
+
+
+def zero_init_scatters(text: str) -> list[dict]:
+    """Scatters writing into zero-initialized operands in StableHLO `text`.
+
+    Returns [{"shape": tuple, "dtype": str, "bytes": int, "func": str}] —
+    one entry per static occurrence (loop trip counts not applied)."""
+    funcs: dict[str, dict] = {}
+    cur = None
+    pending: list[str] = []            # operands of scatters awaiting types
+    for line in text.splitlines():
+        s = line.strip()
+        fm = _SHLO_FUNC_RE.search(s)
+        if fm:
+            cur = {"zeros": set(), "scatters": [], "calls": []}
+            funcs[fm.group(1)] = cur
+            pending = []
+            continue
+        if cur is None:
+            continue
+        zm = _SHLO_ZERO_RE.match(s)
+        if zm:
+            cur["zeros"].add(zm.group(1))
+            continue
+        pm = _SHLO_PROP_RE.match(s)
+        if pm and pm.group(2) in cur["zeros"]:
+            cur["zeros"].add(pm.group(1))
+            continue
+        sm = _SHLO_SCATTER_RE.search(s)
+        if sm:
+            ops = [o.strip() for o in sm.group(1).split(",")]
+            pending.append(ops[0] if ops else "")
+            continue
+        if pending and s.startswith("})"):
+            # region close carries `: (operand_t, idx_t, upd_t) -> result_t`
+            out = s.split("->")[-1]
+            cur["scatters"].append((pending.pop(), _shlo_tensor(out)))
+            continue
+        cm = _SHLO_CALL_RE.search(s)
+        if cm:
+            args = [a.strip() for a in cm.group(2).split(",") if a.strip()]
+            cur["calls"].append((cm.group(1), args))
+
+    def rec(shape_dtype, fname):
+        if shape_dtype is None:
+            return None
+        dims, dt = shape_dtype
+        n = 1
+        for d in dims:
+            n *= d
+        return {"shape": dims, "dtype": dt,
+                "bytes": n * _DTYPE_BYTES.get(dt, 4), "func": fname}
+
+    found = []
+    wrappers: dict[str, tuple[int, tuple]] = {}   # func -> (arg idx, shape)
+    for name, f in funcs.items():
+        for operand, shape_dtype in f["scatters"]:
+            if operand in f["zeros"]:
+                r = rec(shape_dtype, name)
+                if r:
+                    found.append(r)
+            elif operand.startswith("%arg"):
+                try:
+                    wrappers[name] = (int(operand[4:]), shape_dtype)
+                except ValueError:
+                    pass
+    for name, f in funcs.items():
+        for callee, args in f["calls"]:
+            if callee not in wrappers:
+                continue
+            arg_idx, shape_dtype = wrappers[callee]
+            if arg_idx < len(args) and args[arg_idx] in f["zeros"]:
+                r = rec(shape_dtype, f"{name}->{callee}")
+                if r:
+                    found.append(r)
+    return found
+
+
+def weight_gradient_scatters(text: str, specs) -> list[dict]:
+    """The subset of `zero_init_scatters(text)` whose shapes match a blocked
+    selectable-weight layout — trailing dims (n_shards, n_blocks, block) of
+    any SelSpec in `specs` (an iterable). An empty result certifies the
+    module contains no full-shape gradient scatter for those weights."""
+    sigs = {(sp.n_shards, sp.n_blocks, sp.block) for sp in specs}
+    return [r for r in zero_init_scatters(text)
+            if len(r["shape"]) >= 3 and tuple(r["shape"][-3:]) in sigs]
+
+
 def while_trip_counts(text: str) -> list[int]:
     comps = parse_hlo(text)
     out = []

@@ -37,6 +37,9 @@ def build_argparser():
     ap.add_argument("--optimizer", default="adamw",
                     choices=["sgd", "momentum", "adamw"])
     ap.add_argument("--dense", action="store_true", help="disable DGSU")
+    ap.add_argument("--compact-grads", action="store_true",
+                    help="compact-gradient path: never scatter a full-shape "
+                         "dW; optimizer updates gathered blocks only")
     ap.add_argument("--update-ratio", type=float, default=0.2)
     ap.add_argument("--update-layers", type=int, default=0,
                     help="last-K scan blocks (0 = solve from budget)")
@@ -72,7 +75,8 @@ def main(argv=None):
                                   warmup_steps=min(20, args.steps // 10),
                                   decay_steps=args.steps),
         steps=args.steps, checkpoint_every=args.ckpt_every,
-        checkpoint_dir=args.ckpt_dir, seed=args.seed)
+        checkpoint_dir=args.ckpt_dir, seed=args.seed,
+        compact_grads=args.compact_grads and not args.dense)
 
     key = jax.random.PRNGKey(args.seed)
     state, plan = make_train_state(tc, key)

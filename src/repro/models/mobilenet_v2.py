@@ -64,7 +64,9 @@ _sconv.defvjp(_sconv_fwd, _sconv_bwd)
 
 def sconv(x, w, sel, name: str, stride: int = 1, groups: int = 1):
     if sel is not None and groups == 1:
-        idx_dict, spec_dict = sel
+        # (idx, spec) or (idx, spec, wsel): convs have no compact path yet,
+        # so any wsel component is ignored (dense-scatter VJP)
+        idx_dict, spec_dict = sel[0], sel[1]
         if idx_dict is not None and name in idx_dict:
             sp = spec_dict[name]
             return _sconv(x, w, idx_dict[name], stride,
@@ -106,9 +108,14 @@ def init_params(cfg, key) -> dict:
     keys = iter(jax.random.split(key, 200))
 
     def conv_init(k, shape):
+        # Every conv here feeds a GroupNorm, so the forward pass is invariant
+        # to the conv weight's scale — but SGD's effective step on a scale-
+        # invariant weight goes as lr/|w|^2, so the He gain of 2.0 (sized for
+        # un-normalized ReLU nets) quarters the usable learning rate. Gain 0.5
+        # keeps the same shape-conditioning at half the norm.
         fan_in = shape[0] * shape[1] * shape[2]
         return (jax.random.truncated_normal(k, -2, 2, shape, jnp.float32)
-                * (2.0 / fan_in) ** 0.5).astype(dtype)
+                * (0.5 / fan_in) ** 0.5).astype(dtype)
 
     c_in = cfg.in_channels
     c_stem = _make_divisible(cfg.stem_channels * wm)

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.sparse_update import smm
 from repro.models.common import dense_init
 from repro.sharding import current_rules
@@ -112,20 +113,36 @@ def apply_moe(p, cfg, x, sel=None):
         t_loc = t // max(1, _batch_shards(rules))
         capacity = _capacity(t_loc, k, moe.capacity_factor, e)
         e_local = e // n_model
-        bspec = P(rules.rules.get("batch"))
-        body = lambda xf, i, w, wg, wu, wd: _dispatch_combine(
-            cfg, xf, i, w, {"w_gate": wg, "w_up": wu, "w_down": wd}, sel,
-            axis, e_local, capacity)
-        y_flat = jax.shard_map(
+        names = ("w_gate", "w_up", "w_down")
+        batch_spec = P(rules.rules.get("batch"), None)
+        in_specs = [batch_spec, batch_spec, batch_spec] + \
+            [P(axis, None, None)] * 3
+        args = [x_flat, ids, weights] + [p[n] for n in names]
+        # compact path: the wsel leaves must cross shard_map as explicit
+        # arguments (sharded over experts like the weights) so their
+        # cotangents flow back out; closure capture would drop them
+        wsel = sel[2] if sel is not None and len(sel) > 2 else None
+        if wsel is not None:
+            in_specs += [P(axis, None, None, None, None)] * 3
+            args += [wsel[n] for n in names]
+
+            def body(xf, i, w, wg, wu, wd, wsg, wsu, wsd):
+                sub = (sel[0], sel[1],
+                       {"w_gate": wsg, "w_up": wsu, "w_down": wsd})
+                return _dispatch_combine(
+                    cfg, xf, i, w, {"w_gate": wg, "w_up": wu, "w_down": wd},
+                    sub, axis, e_local, capacity)
+        else:
+            def body(xf, i, w, wg, wu, wd):
+                return _dispatch_combine(
+                    cfg, xf, i, w, {"w_gate": wg, "w_up": wu, "w_down": wd},
+                    sel, axis, e_local, capacity)
+        y_flat = shard_map(
             body, mesh=mesh,
-            in_specs=(P(rules.rules.get("batch"), None),
-                      P(rules.rules.get("batch"), None),
-                      P(rules.rules.get("batch"), None),
-                      P(axis, None, None), P(axis, None, None),
-                      P(axis, None, None)),
+            in_specs=tuple(in_specs),
             out_specs=P(rules.rules.get("batch"), None),
             check_vma=False,
-        )(x_flat, ids, weights, p["w_gate"], p["w_up"], p["w_down"])
+        )(*args)
     else:
         capacity = _capacity(t, k, moe.capacity_factor, e)
         y_flat = _dispatch_combine(cfg, x_flat, ids, weights,
@@ -141,10 +158,10 @@ def apply_moe(p, cfg, x, sel=None):
 def _shared_sel(sel):
     if sel is None:
         return None
-    idx, spec = sel
+    idx, spec = sel[0], sel[1]
     if idx is None or "shared" not in idx or "shared" not in spec:
         return None
-    return (idx["shared"], spec["shared"])
+    return tuple(comp["shared"] for comp in sel)
 
 
 def _capacity(t_loc: int, k: int, cf: float, e: int) -> int:

@@ -17,6 +17,7 @@ paper's activation-memory saving.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from functools import partial
 from typing import Any, NamedTuple, Optional
 
@@ -161,8 +162,9 @@ def init_params(cfg: ModelConfig, key) -> dict:
         params["ln0"] = L.init_norm(kemb, cfg.d_model, "layernorm", dtype)
 
     for seg in segs:
-        keys = jax.random.split(jax.random.fold_in(kseg, hash(seg.name) % 2**31),
-                                seg.steps)
+        keys = jax.random.split(
+            jax.random.fold_in(kseg, zlib.crc32(seg.name.encode()) % 2**31),
+            seg.steps)
         if seg.kind == "dense":
             d_ff = _dense_ff_first(cfg) if seg.name == "first" else None
             blocks = [_init_dense_block(k, cfg, dtype, d_ff=d_ff) for k in keys]
@@ -200,12 +202,14 @@ def _window_for(cfg, kind: str, sub: int) -> int:
 
 
 def _sub_sel(sel, name):
+    """Subset a selection tuple — (idx, spec) or (idx, spec, wsel) — to one
+    child subtree. All components share the idx tree's structure."""
     if sel is None:
         return None
-    idx, spec = sel
+    idx = sel[0]
     if idx is None or name not in idx:
         return None
-    return (idx[name], spec[name])
+    return tuple(comp[name] for comp in sel)
 
 
 def _apply_dense_block(cfg, p, x, positions, sel, window: int):
@@ -287,22 +291,28 @@ def _apply_step(cfg, kind: str, p, x, positions, sel):
 
 
 def _run_segment(cfg, kind: str, stack, x, positions, sel_idx, sel_spec,
-                 remat: bool = True):
-    """Scan a segment. sel_idx: stacked [steps, ...] idx tree or None."""
+                 remat: bool = True, sel_wsel=None):
+    """Scan a segment. sel_idx: stacked [steps, ...] idx tree or None.
+    sel_wsel: stacked compact selected-block tree (compact-gradient path)."""
     if stack is None:
         return x, jnp.zeros((2,), jnp.float32)
 
     def body(carry, xs):
         x, aux = carry
-        p_l, idx_l = xs
-        sel = (idx_l, sel_spec) if idx_l is not None else None
+        p_l, idx_l, wsel_l = xs
+        if idx_l is None:
+            sel = None
+        elif wsel_l is None:
+            sel = (idx_l, sel_spec)
+        else:
+            sel = (idx_l, sel_spec, wsel_l)
         x = constrain(x, "batch", "seq", "model_d")
         x, a = _apply_step(cfg, kind, p_l, x, positions, sel)
         return (x, aux + a), None
 
     fn = jax.checkpoint(body) if remat else body
     steps = jax.tree.leaves(stack)[0].shape[0]
-    xs = (stack, sel_idx)
+    xs = (stack, sel_idx, sel_wsel)
     (x, aux), _ = jax.lax.scan(fn, (x, jnp.zeros((2,), jnp.float32)), xs,
                                length=steps)
     return x, aux
@@ -356,13 +366,15 @@ def forward(cfg, params_pair, batch, sel=None, remat: bool = True):
     for seg in segment_layout(cfg):
         f_stack = _pick(frozen, None, "segments", seg.name)
         t_stack = _pick(trainable, None, "segments", seg.name)
-        sel_idx = sel_spec = None
+        sel_idx = sel_spec = sel_wsel = None
         if sel is not None and seg.name in sel[0]:
             sel_idx, sel_spec = sel[0][seg.name], sel[1][seg.name]
+            if len(sel) > 2 and sel[2] is not None:
+                sel_wsel = sel[2].get(seg.name)
         x, a1 = _run_segment(cfg, seg.kind, f_stack, x, positions,
                              None, None, remat)
         x, a2 = _run_segment(cfg, seg.kind, t_stack, x, positions,
-                             sel_idx, sel_spec, remat)
+                             sel_idx, sel_spec, remat, sel_wsel=sel_wsel)
         aux = aux + a1 + a2
     x = L.apply_norm(_pick(frozen, trainable, "final_norm"), x)
     return x, aux

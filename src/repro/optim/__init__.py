@@ -1,5 +1,6 @@
 from repro.optim.optimizers import (init_opt_state, apply_updates,
-                                    learning_rate, clip_by_global_norm)
+                                    apply_updates_mixed, learning_rate,
+                                    clip_by_global_norm)
 
-__all__ = ["init_opt_state", "apply_updates", "learning_rate",
-           "clip_by_global_norm"]
+__all__ = ["init_opt_state", "apply_updates", "apply_updates_mixed",
+           "learning_rate", "clip_by_global_norm"]

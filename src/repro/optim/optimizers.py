@@ -6,6 +6,17 @@ provided for the framework; with dynamic channel re-selection their state
 for newly-selected channels is implicitly zero, matching the paper's
 "reselect and continue" semantics (stale state for deselected channels is
 kept but frozen — it receives zero gradients).
+
+Two update entry points share the same per-leaf arithmetic:
+
+- `apply_updates`: the dense sweep — gradients arrive full-shape (zeros
+  outside the selection) and every element is updated.
+- `apply_updates_mixed`: the compact-gradient path — selectable leaves
+  arrive as compact [K, *lead, n_shards, n_sel, block] gradients; the rule
+  runs on gathered weight/optimizer-state blocks and the result is
+  scatter-written back, so deselected blocks (and their state) are truly
+  frozen. See core.sparse_update's module docstring for the equivalence
+  guarantees between the two.
 """
 from __future__ import annotations
 
@@ -15,6 +26,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import OptimizerConfig
+from repro.core.sparse_update import (SelSpec, gather_param_blocks,
+                                      scatter_param_blocks)
 
 
 def learning_rate(oc: OptimizerConfig, step) -> jnp.ndarray:
@@ -57,52 +70,130 @@ def init_opt_state(oc: OptimizerConfig, trainable) -> dict:
     raise ValueError(oc.kind)
 
 
-def apply_updates(oc: OptimizerConfig, params, grads, state: dict, step):
-    """Returns (new_params, new_state). Gradients are already channel-block
-    sparse (zeros outside the selection) — updates touch only selected
-    blocks."""
-    lr = learning_rate(oc, step)
-    grads, gnorm = clip_by_global_norm(grads, oc.grad_clip)
+# ---------------------------------------------------------------------------
+# per-leaf update rules (shared by the dense sweep and the compact path);
+# each returns (new_param_values, new_mu, new_nu) with None for absent state
+# ---------------------------------------------------------------------------
 
+def _leaf_update(oc: OptimizerConfig, lr, t, p, g, mu, nu):
+    g32 = g.astype(jnp.float32)
+    p32 = p.astype(jnp.float32)
     if oc.kind == "sgd" and oc.momentum == 0.0:
-        def upd(p, g):
-            new = p.astype(jnp.float32) - lr * g.astype(jnp.float32)
-            if oc.weight_decay:
-                new = new - lr * oc.weight_decay * p.astype(jnp.float32)
-            return new.astype(p.dtype)
-        return jax.tree.map(upd, params, grads), state
-
+        new = p32 - lr * g32
+        if oc.weight_decay:
+            new = new - lr * oc.weight_decay * p32
+        return new.astype(p.dtype), None, None
     if oc.kind in ("sgd", "momentum"):
-        def upd(p, g, mu):
-            mu_new = oc.momentum * mu + g.astype(jnp.float32)
-            new = p.astype(jnp.float32) - lr * mu_new
-            if oc.weight_decay:
-                new = new - lr * oc.weight_decay * p.astype(jnp.float32)
-            return new.astype(p.dtype), mu_new
-        out = jax.tree.map(upd, params, grads, state["mu"])
-        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
-        new_mu = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
-        return new_p, {"mu": new_mu}
-
+        mu_new = oc.momentum * mu + g32
+        new = p32 - lr * mu_new
+        if oc.weight_decay:
+            new = new - lr * oc.weight_decay * p32
+        return new.astype(p.dtype), mu_new, None
     if oc.kind == "adamw":
-        t = jnp.asarray(step, jnp.float32) + 1.0
         b1, b2 = oc.beta1, oc.beta2
-
-        def upd(p, g, mu, nu):
-            g32 = g.astype(jnp.float32)
-            mu_new = b1 * mu + (1 - b1) * g32
-            nu_new = b2 * nu + (1 - b2) * g32 * g32
-            mu_hat = mu_new / (1 - b1 ** t)
-            nu_hat = nu_new / (1 - b2 ** t)
-            new = p.astype(jnp.float32) - lr * (
-                mu_hat / (jnp.sqrt(nu_hat) + oc.eps)
-                + oc.weight_decay * p.astype(jnp.float32))
-            return new.astype(p.dtype), mu_new, nu_new
-        out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
-        is3 = lambda x: isinstance(x, tuple)
-        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=is3)
-        new_mu = jax.tree.map(lambda o: o[1], out, is_leaf=is3)
-        new_nu = jax.tree.map(lambda o: o[2], out, is_leaf=is3)
-        return new_p, {"mu": new_mu, "nu": new_nu}
-
+        mu_new = b1 * mu + (1 - b1) * g32
+        nu_new = b2 * nu + (1 - b2) * g32 * g32
+        mu_hat = mu_new / (1 - b1 ** t)
+        nu_hat = nu_new / (1 - b2 ** t)
+        new = p32 - lr * (mu_hat / (jnp.sqrt(nu_hat) + oc.eps)
+                          + oc.weight_decay * p32)
+        return new.astype(p.dtype), mu_new, nu_new
     raise ValueError(oc.kind)
+
+
+def apply_updates(oc: OptimizerConfig, params, grads, state: dict, step):
+    """Dense sweep: returns (new_params, new_state). Gradients are already
+    channel-block sparse (zeros outside the selection) — every element is
+    swept, but only selected blocks change (modulo momentum tails and weight
+    decay; see core.sparse_update docstring)."""
+    lr = learning_rate(oc, step)
+    t = jnp.asarray(step, jnp.float32) + 1.0
+    grads, _ = clip_by_global_norm(grads, oc.grad_clip)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"]) if "mu" in state \
+        else [None] * len(flat_p)
+    flat_nu = treedef.flatten_up_to(state["nu"]) if "nu" in state \
+        else [None] * len(flat_p)
+    out = [_leaf_update(oc, lr, t, p, g, mu, nu)
+           for p, g, mu, nu in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_state = {}
+    if "mu" in state:
+        new_state["mu"] = jax.tree_util.tree_unflatten(
+            treedef, [o[1] for o in out])
+    if "nu" in state:
+        new_state["nu"] = jax.tree_util.tree_unflatten(
+            treedef, [o[2] for o in out])
+    return new_p, new_state
+
+
+def apply_updates_mixed(oc: OptimizerConfig, params, grads, compact_grads,
+                        state: dict, step, sel_idx, spec_tree):
+    """Compact-gradient update: selectable leaves (those with a SelSpec in
+    `spec_tree`, keyed by segment under params["segments"]) are updated on
+    their gathered blocks only — the rule never sweeps the full tensor, and
+    optimizer state outside the selection is untouched (frozen). All other
+    leaves take the dense rule with their `grads` leaf.
+
+    grads: full-structure dense grads (zero at selectable leaves, from the
+    stop-gradient in the compact train step — never read there, so XLA DCEs
+    the zeros). compact_grads: {segment: nested {leaf: compact dW}} matching
+    `sel_idx`/`spec_tree`. Returns (new_params, new_state)."""
+    lr = learning_rate(oc, step)
+    t = jnp.asarray(step, jnp.float32) + 1.0
+    # joint clip: compact leaves hold exactly the nonzero content of their
+    # dense counterparts (whose leaves here are zeros), so the global norm
+    # matches the dense sweep's up to float-accumulation order
+    if oc.grad_clip > 0:
+        (grads, compact_grads), _ = clip_by_global_norm(
+            (grads, compact_grads), oc.grad_clip)
+
+    def leaf_compact(p, g_sel, idx, spec, mu, nu):
+        p_sel = gather_param_blocks(p, idx, spec)
+        mu_sel = gather_param_blocks(mu, idx, spec) if mu is not None else None
+        nu_sel = gather_param_blocks(nu, idx, spec) if nu is not None else None
+        new_sel, mu_new, nu_new = _leaf_update(oc, lr, t, p_sel, g_sel,
+                                               mu_sel, nu_sel)
+        p_new = scatter_param_blocks(p, new_sel, idx, spec)
+        mu_out = scatter_param_blocks(mu, mu_new, idx, spec) \
+            if mu is not None else None
+        nu_out = scatter_param_blocks(nu, nu_new, idx, spec) \
+            if nu is not None else None
+        return p_new, mu_out, nu_out
+
+    def walk(p, g, cg, spec, idx, mu, nu):
+        if isinstance(spec, SelSpec):
+            return leaf_compact(p, cg, idx, spec, mu, nu)
+        if isinstance(p, dict):
+            out = {}
+            for key, sub in p.items():
+                in_spec = isinstance(spec, dict) and key in spec
+                out[key] = walk(
+                    sub, g[key],
+                    cg[key] if in_spec and cg is not None else None,
+                    spec[key] if in_spec else None,
+                    idx[key] if in_spec and idx is not None else None,
+                    mu[key] if mu is not None else None,
+                    nu[key] if nu is not None else None)
+            return out
+        return _leaf_update(oc, lr, t, p, g, mu, nu)
+
+    # spec/idx/compact trees are keyed by segment under "segments"
+    res = walk(params, grads, {"segments": compact_grads or {}},
+               {"segments": spec_tree}, {"segments": sel_idx or {}},
+               state.get("mu"), state.get("nu"))
+
+    def pick(node, i):
+        if isinstance(node, dict):
+            return {k: pick(v, i) for k, v in node.items()}
+        return node[i]
+
+    new_p = pick(res, 0)
+    new_state = {}
+    if "mu" in state:
+        new_state["mu"] = pick(res, 1)
+    if "nu" in state:
+        new_state["nu"] = pick(res, 2)
+    return new_p, new_state

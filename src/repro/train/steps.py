@@ -21,7 +21,7 @@ from repro.core.schedule import maybe_reselect
 from repro.core.selection import SelectionPlan
 from repro.core.sparse_update import split_stack
 from repro.models import transformer as T
-from repro.optim import apply_updates, init_opt_state
+from repro.optim import apply_updates, apply_updates_mixed, init_opt_state
 
 TrainState = dict  # alias: plain pytree
 
@@ -96,10 +96,20 @@ def make_train_state(tc: TrainConfig, key, params=None,
 
 
 def make_train_step(tc: TrainConfig, plan: SelectionPlan,
-                    use_selection: bool = True, donate: bool = True):
-    """Returns a jit-able train_step(state, batch) -> (state, metrics)."""
+                    use_selection: bool = True, donate: bool = True,
+                    compact_grads: Optional[bool] = None):
+    """Returns a jit-able train_step(state, batch) -> (state, metrics).
+
+    compact_grads (default: tc.compact_grads) routes every segment weight
+    with a SelSpec through the compact-gradient path: the backward emits the
+    [K, n_shards, n_sel, block] dW directly (no full-shape zero-buffer
+    scatter), the optimizer updates gathered weight/state blocks, and the
+    result is scatter-written into the full weights once. Non-selectable
+    leaves (norms, routers, embeddings) keep the dense path."""
     cfg = tc.model
     remat = tc.remat != "none"
+    if compact_grads is None:
+        compact_grads = tc.compact_grads
 
     def train_step(state, batch):
         step = state["step"]
@@ -111,24 +121,47 @@ def make_train_step(tc: TrainConfig, plan: SelectionPlan,
         else:
             sel = None
 
-        def loss_of(trainable):
-            return T.loss_fn(cfg, (state["params_frozen"], trainable), batch,
-                             sel=sel, remat=remat)
+        trainable = state["params_trainable"]
+        if compact_grads and sel is not None:
+            from repro.core.sparse_update import (gather_selected_tree,
+                                                  map_selectable)
+            wsel = gather_selected_tree(trainable.get("segments", {}),
+                                        sel_idx, plan.spec)
+            spec_top = {"segments": plan.spec}
 
-        (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(
-            state["params_trainable"])
-        from repro.core.sparse_update import (compact_allreduce_enabled,
-                                              compress_grads)
-        if (compact_allreduce_enabled() and sel is not None
-                and "segments" in grads):
-            from repro.models.specs import param_logical_specs
-            logical = param_logical_specs(cfg).get("segments", {})
-            grads = dict(grads)
-            grads["segments"] = compress_grads(grads["segments"], sel_idx,
-                                               plan.spec, logical)
-        new_params, new_opt = apply_updates(tc.optimizer,
-                                            state["params_trainable"], grads,
-                                            state["opt"], step)
+            def loss_of(diff):
+                t_tree, ws = diff
+                # selectable leaves only feed the forward matmul; their
+                # gradient arrives compactly via `ws`
+                stopped = map_selectable(t_tree, spec_top,
+                                         jax.lax.stop_gradient)
+                return T.loss_fn(cfg, (state["params_frozen"], stopped),
+                                 batch, sel=(sel_idx, plan.spec, ws),
+                                 remat=remat)
+
+            (loss, metrics), (g_dense, g_sel) = jax.value_and_grad(
+                loss_of, has_aux=True)((trainable, wsel))
+            new_params, new_opt = apply_updates_mixed(
+                tc.optimizer, trainable, g_dense, g_sel, state["opt"], step,
+                sel_idx, plan.spec)
+        else:
+            def loss_of(t_tree):
+                return T.loss_fn(cfg, (state["params_frozen"], t_tree),
+                                 batch, sel=sel, remat=remat)
+
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(trainable)
+            from repro.core.sparse_update import (compact_allreduce_enabled,
+                                                  compress_grads)
+            if (compact_allreduce_enabled() and sel is not None
+                    and "segments" in grads):
+                from repro.models.specs import param_logical_specs
+                logical = param_logical_specs(cfg).get("segments", {})
+                grads = dict(grads)
+                grads["segments"] = compress_grads(grads["segments"], sel_idx,
+                                                   plan.spec, logical)
+            new_params, new_opt = apply_updates(tc.optimizer, trainable,
+                                                grads, state["opt"], step)
         new_state = {
             "step": step + 1,
             "params_trainable": new_params,

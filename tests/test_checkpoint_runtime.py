@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing import given, settings, st
 
 from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
 from repro.runtime import PreemptionHandler, RestartableLoop, StragglerMonitor
@@ -55,8 +55,8 @@ def test_elastic_reshard_on_load(tmp_path):
     """Checkpoint written without a mesh restores with explicit shardings
     (single-device here; the sharding tree plumbing is what's exercised)."""
     from jax.sharding import NamedSharding, PartitionSpec as P
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_debug_mesh
+    mesh = make_debug_mesh(1, 1)
     tree = {"w": jnp.arange(16.0).reshape(4, 4)}
     path = str(tmp_path / "x.ckpt")
     save_pytree(path, tree)

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing import given, settings, st
 
 from repro.configs import SparseUpdateConfig, get_smoke_config
 from repro.core.act_prune import block_act_prune, block_sparsity

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing import given, settings, st
 
 from repro.kernels import ref
 from repro.kernels.block_act_prune import block_act_prune_kernel
@@ -53,6 +53,44 @@ def test_block_sparse_dw_property(m_t, k_t, nb, blk, seed):
     want = ref.block_sparse_dw_ref(x, dy, idx, blk)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("r,nb,blk,n_sel,tr", [
+    (32, 8, 8, 3, 32),
+    (64, 4, 16, 2, 32),
+    (128, 16, 128, 8, 128),   # MXU-aligned full-config shape
+    (256, 6, 8, 6, 256),      # full selection: every block overwritten
+])
+def test_block_scatter_update_sweep(dtype, r, nb, blk, n_sel, tr):
+    from repro.kernels.scatter_blocks import block_scatter_update_kernel
+    rng = np.random.default_rng(r * 3 + nb)
+    w = jnp.asarray(rng.normal(size=(r, nb * blk)), dtype)
+    upd = jnp.asarray(rng.normal(size=(r, n_sel, blk)), dtype)
+    idx = jnp.asarray(rng.choice(nb, n_sel, replace=False), jnp.int32)
+    out = block_scatter_update_kernel(w, upd, idx, tr=tr, interpret=True)
+    want = ref.block_scatter_update_ref(w, upd, idx, blk)
+    # pure write routing — must be exact in any dtype
+    np.testing.assert_array_equal(np.asarray(out, np.float32),
+                                  np.asarray(want, np.float32))
+
+
+@given(
+    r_t=st.integers(1, 4), nb=st.integers(2, 8),
+    blk=st.sampled_from([8, 16]), seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=15, deadline=None)
+def test_block_scatter_update_property(r_t, nb, blk, seed):
+    from repro.kernels.scatter_blocks import block_scatter_update_kernel
+    rng = np.random.default_rng(seed)
+    r = 16 * r_t
+    w = jnp.asarray(rng.normal(size=(r, nb * blk)), jnp.float32)
+    n_sel = int(rng.integers(1, nb + 1))
+    idx = jnp.asarray(rng.choice(nb, n_sel, replace=False), jnp.int32)
+    upd = jnp.asarray(rng.normal(size=(r, n_sel, blk)), jnp.float32)
+    out = block_scatter_update_kernel(w, upd, idx, tr=16, interpret=True)
+    want = ref.block_scatter_update_ref(w, upd, idx, blk)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

@@ -33,16 +33,25 @@ def test_param_logical_specs_cover_all_leaves():
 
 
 def test_resolve_pspec_divisibility_fallback():
+    from types import SimpleNamespace
     from repro.launch.specs import resolve_pspec
-    from repro.sharding import default_rules
-    import repro.launch.mesh as M
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    rules = default_rules(mesh)
-    spec = resolve_pspec((10, 7), ("batch", "ff"), rules)
-    assert spec == jax.sharding.PartitionSpec(("data",), ("model",)) or True
-    # non-divisible dims fall back to None on a bigger (simulated) mesh
-    rules.mesh = mesh  # 1x1: everything divisible; structural check only
+    from repro.launch.mesh import make_debug_mesh
+    from repro.sharding import AxisRules, default_rules
+    P = jax.sharding.PartitionSpec
+
+    rules = default_rules(make_debug_mesh(1, 1))
+    # 1x1 mesh: every dim divisible, axes applied as-is
+    assert resolve_pspec((10, 7), ("batch", "ff"), rules) == \
+        P(("data",), ("model",))
+    # simulated 2x4 mesh: 7 % 4 != 0 -> the ff dim falls back to None
+    big = AxisRules(dict(rules.rules),
+                    mesh=SimpleNamespace(shape={"data": 2, "model": 4}),
+                    batch_axes=("data",), model_axis="model")
+    assert resolve_pspec((10, 7), ("batch", "ff"), big) == P(("data",), None)
+    assert resolve_pspec((10, 8), ("batch", "ff"), big) == \
+        P(("data",), ("model",))
+    # unknown / None logical names resolve to None without error
+    assert resolve_pspec((10, 7), (None, "nope"), big) == P(None, None)
 
 
 def test_hlo_collective_parser_synthetic():
@@ -90,14 +99,14 @@ sys.path.insert(0, sys.argv[1])
 import dataclasses
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.compat import make_mesh
 from repro.configs import get_smoke_config, ShapeConfig, SparseUpdateConfig, OptimizerConfig, TrainConfig
 from repro.sharding import default_rules, use_rules
 from repro.launch.specs import make_train_cell, rules_for
 from repro.train import make_train_state, make_train_step
 from repro.models import transformer as T
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 
 # --- sharded MoE == local MoE -------------------------------------------
 cfg = get_smoke_config("deepseek-moe-16b")
