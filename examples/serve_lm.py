@@ -1,7 +1,11 @@
-"""Batched serving example: prefill + decode slots over a request queue.
+"""Batched serving example: continuous batching over a request queue.
 
     PYTHONPATH=src python examples/serve_lm.py --arch llama3-8b
     PYTHONPATH=src python examples/serve_lm.py --arch rwkv6-3b   # O(1)-state decode
+    PYTHONPATH=src python examples/serve_lm.py --arch gemma3-4b --temperature 0.8
+
+With more requests than slots, finished slots are re-prefilled from the
+queue mid-flight (watch the refill count in the summary line).
 """
 import argparse
 import sys
@@ -14,9 +18,13 @@ from repro.launch import serve as serve_cli
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
-    serve_cli.main(["--arch", args.arch, "--smoke", "--requests", "8",
-                    "--batch", "4", "--prompt-len", "24", "--gen-len", "8"])
+    serve_cli.main(["--arch", args.arch, "--smoke",
+                    "--requests", str(args.requests), "--batch", "4",
+                    "--prompt-len", "24", "--gen-len", "8",
+                    "--temperature", str(args.temperature)])
 
 
 if __name__ == "__main__":

@@ -12,6 +12,7 @@ against (tests/test_memory.py).
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional
 
 import jax
@@ -92,9 +93,14 @@ def dense_training_extra_bytes(cfg: ModelConfig, tokens_per_device: int,
 
 
 def solve_max_layers(cfg: ModelConfig, sp: SparseUpdateConfig,
-                     tokens_per_device: int, optimizer_slots: int = 0) -> int:
+                     tokens_per_device: int, optimizer_slots: int = 0,
+                     *, strict: bool = False) -> int:
     """Largest last-K (scan steps) whose extra memory fits sp.memory_budget_bytes
-    — the paper's 'update as many (later) layers as the budget allows'."""
+    — the paper's 'update as many (later) layers as the budget allows'.
+
+    If even K=1 exceeds the budget, the solver cannot honor it: it warns and
+    returns 1 (training needs at least one trainable step), or raises under
+    ``strict=True`` — it never silently blows the 256KB-style budget."""
     from repro.models import transformer as T
     total = sum(s.steps for s in T.segment_layout(cfg))
     best = 0
@@ -104,4 +110,14 @@ def solve_max_layers(cfg: ModelConfig, sp: SparseUpdateConfig,
             best = k
         else:
             break
-    return max(best, 1)
+    if best == 0:
+        need = training_extra_bytes(cfg, sp, 1, tokens_per_device,
+                                    optimizer_slots)
+        msg = (f"memory budget {sp.memory_budget_bytes}B cannot fit even one "
+               f"trainable scan step of {cfg.name} (needs {need}B at "
+               f"{tokens_per_device} tokens/device)")
+        if strict:
+            raise ValueError(msg)
+        warnings.warn(msg + "; falling back to K=1 over budget", stacklevel=2)
+        return 1
+    return best

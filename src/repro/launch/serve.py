@@ -1,79 +1,65 @@
-"""Serving launcher: batched decode with a request queue.
+"""Serving launcher: thin CLI over the continuous-batching engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
         --requests 16 --batch 4 --prompt-len 32 --gen-len 16
 
-Continuous-batching-lite: requests are admitted into fixed decode slots;
-finished slots are refilled from the queue (slot state = KV cache rows).
-On CPU this serves the smoke configs; the same driver lowers to the
-production mesh for the full configs (see launch/dryrun.py decode cells).
+Requests are admitted into fixed decode slots; a finished slot is
+re-prefilled from the queue on the next engine iteration without draining
+the batch (slot state = cache rows; see repro/serve/__init__.py for the
+slot state machine). Reported request/token counts cover ACTIVE slots only
+— padded/free slots are never counted. On CPU this serves the smoke
+configs; the same engine lowers to the production mesh for the full
+configs (see launch/dryrun.py decode cells).
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config, get_smoke_config
-from repro.models import decoding as D
 from repro.models import transformer as T
+from repro.serve import ServeEngine
+from repro.serve.engine import make_random_requests
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
+def build_engine(args, cfg=None):
+    cfg = cfg or (get_smoke_config(args.arch) if args.smoke
+                  else get_config(args.arch))
+    params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
+    engine = ServeEngine(
+        cfg, params, num_slots=args.batch,
+        max_len=args.prompt_len + args.gen_len,
+        temperature=args.temperature, eos_id=args.eos_id, seed=args.seed)
+    return cfg, engine
+
+
+def add_serve_args(ap: argparse.ArgumentParser):
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--eos-id", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+    return ap
 
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    key = jax.random.PRNGKey(args.seed)
-    params = T.init_params(cfg, key)
-    max_len = args.prompt_len + args.gen_len
 
-    prefill = jax.jit(lambda p, b: D.prefill(cfg, p, b, pad_to=max_len))
-    decode = jax.jit(lambda p, b, c: D.decode_step(cfg, p, b, c))
-
-    rng = np.random.default_rng(args.seed)
-    queue = [rng.integers(0, cfg.vocab_size, args.prompt_len).astype(np.int32)
-             for _ in range(args.requests)]
-    done = 0
-    t0 = time.perf_counter()
-    tokens_out = 0
-    while queue:
-        batch_prompts = [queue.pop(0) for _ in range(min(args.batch, len(queue)))]
-        while len(batch_prompts) < args.batch:   # pad batch with repeats
-            batch_prompts.append(batch_prompts[-1])
-        prompts = jnp.asarray(np.stack(batch_prompts))
-        logits, cache = prefill(params, {"tokens": prompts})
-        toks = jnp.argmax(logits, -1)[:, None]
-        outs = [toks]
-        for t in range(args.prompt_len, max_len - 1):
-            batch = {"tokens": toks,
-                     "positions": jnp.full((args.batch, 1), t, jnp.int32)}
-            if cfg.mrope:
-                batch["positions"] = jnp.broadcast_to(
-                    batch["positions"], (3, args.batch, 1))
-            if cfg.embed_inputs:
-                batch["embeds"] = jax.random.normal(
-                    key, (args.batch, 1, cfg.d_model), jnp.dtype(cfg.dtype))
-                batch.pop("tokens")
-            logits, cache = decode(params, batch, cache)
-            toks = jnp.argmax(logits, -1)[:, None]
-            outs.append(toks)
-        done += len(batch_prompts)
-        tokens_out += args.gen_len * args.batch
-        print(f"[serve] completed {done}/{args.requests} requests")
-    dt = time.perf_counter() - t0
-    print(f"[serve] {tokens_out} tokens in {dt:.2f}s "
-          f"({tokens_out/dt:.1f} tok/s incl. compile)")
+def main(argv=None):
+    args = add_serve_args(argparse.ArgumentParser()).parse_args(argv)
+    cfg, engine = build_engine(args)
+    requests = make_random_requests(cfg, args.requests, args.prompt_len,
+                                    args.gen_len, seed=args.seed)
+    stats = engine.run(requests, verbose=True)
+    print(f"[serve] {stats.requests_completed}/{args.requests} requests, "
+          f"{stats.tokens_out} tokens in {stats.wall_s:.2f}s "
+          f"({stats.tok_per_s:.1f} tok/s incl. compile, "
+          f"{stats.refills} slot refills)")
+    print(f"[serve] latency p50 {stats.latency_p50_s * 1e3:.1f}ms "
+          f"p95 {stats.latency_p95_s * 1e3:.1f}ms")
+    return stats
 
 
 if __name__ == "__main__":

@@ -107,7 +107,7 @@ def batch_shardings(cfg, shape: ShapeConfig, rules: AxisRules) -> dict:
 _CACHE_LOGICAL = {
     "k": ("layers", "batch", "cache_seq", "kv_heads", None),
     "v": ("layers", "batch", "cache_seq", "kv_heads", None),
-    "pos": ("layers",),
+    "pos": ("layers", "batch"),
     "h": ("layers", "batch", "d_inner", None),
     "conv": ("layers", "batch", None, "d_inner"),
     "s": ("layers", "batch", None, None, None),

@@ -77,6 +77,45 @@ def init_cache(cfg, batch: int, seq_len: int):
 
 
 # ---------------------------------------------------------------------------
+# cache row ops (continuous batching)
+#
+# Every cache leaf — dense KV k/v, ring-buffer k/v, per-row pos, mamba
+# h/conv state, rwkv s/last state — is shaped (scan_steps, batch, ...), so a
+# decode *slot* is batch row `i` of every leaf. The serving engine re-prefills
+# a finished slot from the queue by running a batch=1 prefill and splicing the
+# resulting row into the live batch cache; both ops are pure tree-maps over
+# fixed shapes and stay inside a single jitted step (`row` may be traced).
+# ---------------------------------------------------------------------------
+
+def cache_extract_row(cache, row):
+    """Slice batch row `row` out of every leaf, keeping a batch dim of 1."""
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_slice_in_dim(a, row, 1, axis=1), cache)
+
+
+def cache_insert_row(cache, row_cache, row):
+    """Write a batch=1 cache (e.g. from a batch=1 prefill) into batch row
+    `row` of every leaf. Overwrites the row completely — k/v (ring caches
+    included: prefill zero-fills unused ring slots), recurrent state, and
+    pos — so a dirty slot left by a finished request is fully recycled."""
+    def ins(dst, src):
+        # a smaller update would silently partial-write the row
+        assert src.shape[1] == 1 and src.shape[0] == dst.shape[0] \
+            and src.shape[2:] == dst.shape[2:], (src.shape, dst.shape)
+        return jax.lax.dynamic_update_slice_in_dim(
+            dst, src.astype(dst.dtype), row, axis=1)
+    return jax.tree.map(ins, cache, row_cache)
+
+
+def cache_reset_row(cache, row):
+    """Zero batch row `row` of every leaf (slot back to its init state)."""
+    def rst(a):
+        zero = jnp.zeros((a.shape[0], 1) + a.shape[2:], a.dtype)
+        return jax.lax.dynamic_update_slice_in_dim(a, zero, row, axis=1)
+    return jax.tree.map(rst, cache)
+
+
+# ---------------------------------------------------------------------------
 # decode step
 # ---------------------------------------------------------------------------
 
@@ -234,12 +273,16 @@ def _prefill_attn(cfg, p, x, positions, window, pad_to):
     out = out.reshape(b, s, -1)
     out = jnp.matmul(out, p["wo"])
     if window > 0:
-        kc = _ring_pack(k, window).astype(_cache_dtype(cfg))
-        vc = _ring_pack(v, window).astype(_cache_dtype(cfg))
+        # cap the ring at the cache capacity: when window >= pad_to the ring
+        # never wraps, and init_kv_cache sizes the cache the same way, so
+        # prefill rows stay insertable into an init_cache'd batch cache
+        w = min(window, pad_to)
+        kc = _ring_pack(k, w).astype(_cache_dtype(cfg))
+        vc = _ring_pack(v, w).astype(_cache_dtype(cfg))
     else:
         kc = _pad_cache(k, pad_to).astype(_cache_dtype(cfg))
         vc = _pad_cache(v, pad_to).astype(_cache_dtype(cfg))
-    cache = {"k": kc, "v": vc, "pos": jnp.array(s, jnp.int32)}
+    cache = {"k": kc, "v": vc, "pos": jnp.full((b,), s, jnp.int32)}
     return out, cache
 
 
@@ -311,6 +354,9 @@ def _mamba_prefill_state(p, cfg, x):
     xz = jnp.matmul(x, p["in_proj"])
     x_in = xz[..., : M.d_inner(cfg)]
     conv = x_in[:, -(cfg.ssm.d_conv - 1):]
+    pad = cfg.ssm.d_conv - 1 - conv.shape[1]
+    if pad > 0:   # prompt shorter than the history: oldest slots stay zero
+        conv = jnp.pad(conv, ((0, 0), (pad, 0), (0, 0)))
     # final ssm state: recompute the scan's last carry
     h_last = _mamba_last_state(p, cfg, x)
     return out, {"h": h_last, "conv": conv.astype(dt)}

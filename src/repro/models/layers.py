@@ -316,36 +316,38 @@ def attention(p, cfg, x, positions, *, window: int = 0, sel=None,
 def decode_attention(p, cfg, x, positions, cache, *, window: int = 0):
     """Single-token decode against a KV cache.
 
-    cache: {"k","v": [B, S_cache, Hkv, D], "pos": scalar int32 tokens-so-far}
+    cache: {"k","v": [B, S_cache, Hkv, D], "pos": [B] int32 tokens-so-far}
+    `pos` is per batch row so decode slots can sit at different depths
+    (continuous batching: a freshly refilled slot decodes position
+    `prompt_len` while its neighbours are deep into generation).
     For sliding-window layers the cache is a ring buffer of size `window`.
     """
     b, s, _ = x.shape
     assert s == 1
     hd = cfg.resolved_head_dim
     q, k, v = _qkv(p, cfg, x, positions)
-    pos = cache["pos"]                    # position index of the new token
+    pos = cache["pos"]                    # [B] position index of the new token
     s_cache = cache["k"].shape[1]
     # ring buffer when windowed (s_cache == window), else direct slot
     slot = pos % s_cache if window > 0 else pos
-    k_cache = jax.lax.dynamic_update_slice(
-        cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
-    v_cache = jax.lax.dynamic_update_slice(
-        cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    rows = jnp.arange(b)
+    k_cache = cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype))
+    v_cache = cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype))
 
     hkv = cfg.num_kv_heads
     g = cfg.num_heads // hkv
     qg = q.reshape(b, hkv, g, hd)
     scores = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
                         preferred_element_type=jnp.float32) / math.sqrt(hd)
-    idx = jnp.arange(s_cache)
+    idx = jnp.arange(s_cache)[None, :]
     if window > 0:
         # slot i currently holds position p_at = pos - ((pos - i) mod W);
         # by construction pos - W < p_at <= pos, so only p_at >= 0 matters.
-        p_at = pos - jnp.mod(pos - idx, s_cache)
-        valid = p_at >= 0
+        p_at = pos[:, None] - jnp.mod(pos[:, None] - idx, s_cache)
+        valid = p_at >= 0                                      # [B, S_cache]
     else:
-        valid = idx <= pos
-    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+        valid = idx <= pos[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhgk,bkhd->bhgd", probs.astype(q.dtype), v_cache,
                      preferred_element_type=jnp.float32).astype(q.dtype)
@@ -361,7 +363,7 @@ def init_kv_cache(cfg, batch: int, seq_len: int, *, window: int = 0, dtype=None)
     return {
         "k": jnp.zeros((batch, size, cfg.num_kv_heads, hd), dt),
         "v": jnp.zeros((batch, size, cfg.num_kv_heads, hd), dt),
-        "pos": jnp.zeros((), jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),
     }
 
 

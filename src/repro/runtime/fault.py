@@ -3,9 +3,11 @@ checkpoint-restart loops.
 
 Single-controller implementations with multi-host-shaped interfaces:
 
-- PreemptionHandler: SIGTERM/SIGINT -> grace flag; the train loop checks it
-  each step and performs an emergency checkpoint + clean exit (maps to GKE
-  node drain / TPU maintenance events).
+- PreemptionHandler: SIGTERM (and, opt-in via include_sigint=True, SIGINT)
+  -> grace flag; the train loop checks it each step and performs an
+  emergency checkpoint + clean exit (maps to GKE node drain / TPU
+  maintenance events). SIGINT stays opt-in so Ctrl-C keeps its normal
+  KeyboardInterrupt behavior during interactive runs.
 - StragglerMonitor: per-step wall-time watchdog; steps slower than
   `factor` x rolling median are flagged (at pod scale, per-host step times
   are all-gathered and the slow *host* is flagged for replacement — here
@@ -25,10 +27,18 @@ from typing import Callable, Optional
 
 
 class PreemptionHandler:
-    def __init__(self, signals=(signal.SIGTERM,)):
+    """Installs handlers on SIGTERM by default; pass include_sigint=True to
+    also trap SIGINT (explicit opt-in — trapping Ctrl-C by default would
+    swallow KeyboardInterrupt). Previous handlers are restored on exit."""
+
+    def __init__(self, signals=(signal.SIGTERM,), *,
+                 include_sigint: bool = False):
         self._flag = threading.Event()
         self._prev = {}
-        self._signals = signals
+        sigs = tuple(signals)
+        if include_sigint and signal.SIGINT not in sigs:
+            sigs += (signal.SIGINT,)
+        self._signals = sigs
 
     def __enter__(self):
         for sig in self._signals:

@@ -1,0 +1,33 @@
+"""Continuous-batching serving subsystem: scheduler + engine + sampling.
+
+The engine owns a fixed number of decode *slots* (batch rows of the stacked
+per-layer caches from ``models/decoding.py``). Each slot runs the state
+machine::
+
+    FREE --admit--> ACTIVE --finish--> FREE
+          (batch=1 prefill of the next   (max_new_tokens reached, or the
+           queued request, spliced into   sampled token == eos_id; the row
+           the batch cache row via        is left dirty and fully
+           cache_insert_row)              overwritten on the next admit)
+
+Admission is per-slot: a finished slot is re-prefilled from the queue on the
+very next engine iteration while the other slots keep decoding — the batch is
+never drained. Each engine iteration is (1) refill every FREE slot while the
+queue is non-empty, then (2) one jitted fixed-shape ``decode_step`` over all
+slots with per-slot positions. FREE slots still flow through the batched
+decode (fixed shapes), but an active-slot mask keeps their tokens out of
+sampling results and out of every throughput/latency counter — padded slots
+are never counted as requests or tokens.
+
+Request/token accounting is therefore correct by construction:
+``requests_completed`` counts FINISH transitions and ``tokens_out`` counts
+sampled tokens on ACTIVE slots only.
+"""
+from repro.serve.engine import RequestResult, ServeEngine, ServeStats
+from repro.serve.sampling import sample_token
+from repro.serve.scheduler import Request, Scheduler, Slot, SlotState
+
+__all__ = [
+    "Request", "RequestResult", "Scheduler", "ServeEngine", "ServeStats",
+    "Slot", "SlotState", "sample_token",
+]

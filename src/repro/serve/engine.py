@@ -1,0 +1,201 @@
+"""Continuous-batching engine: fixed decode slots over the stacked caches.
+
+One engine iteration:
+
+1. *Refill*: while a FREE slot and a queued request exist, run a batch=1
+   prefill of the request (jitted, padded to ``max_len``), sample its first
+   token, and splice the resulting cache row into the live batch cache with
+   ``decoding.cache_insert_row`` — the other slots are untouched and the
+   batch is never drained.
+2. *Decode*: one jitted fixed-shape ``decoding.decode_step`` over all slots
+   with per-slot positions, then one sampling call. Tokens landing on FREE
+   slots are discarded; only ACTIVE slots are recorded/accounted.
+
+PRNG: the engine key is split every step, so temperature sampling and the
+placeholder-embeds input path (``cfg.embed_inputs`` frontends) never reuse a
+key across steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decoding as D
+from repro.serve.sampling import sample_token
+from repro.serve.scheduler import Request, Scheduler
+
+__all__ = ["RequestResult", "ServeEngine", "ServeStats",
+           "make_random_requests"]
+
+
+@dataclasses.dataclass
+class RequestResult:
+    rid: int
+    tokens: list            # sampled token ids, in order
+    latency_s: float        # submit -> completion (includes queueing)
+
+
+@dataclasses.dataclass
+class ServeStats:
+    requests_completed: int
+    tokens_out: int
+    wall_s: float
+    tok_per_s: float
+    latency_p50_s: float
+    latency_p95_s: float
+    refills: int            # admissions that recycled a dirty slot
+    results: dict           # rid -> RequestResult
+
+
+class ServeEngine:
+    """Continuous-batching serve loop for one model + parameter set."""
+
+    def __init__(self, cfg, params, *, num_slots: int, max_len: int,
+                 temperature: float = 0.0, eos_id: Optional[int] = None,
+                 seed: int = 0):
+        assert num_slots >= 1 and max_len >= 2
+        self.cfg = cfg
+        self.params = params
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.temperature = float(temperature)
+        self.eos_id = eos_id
+        self._key = jax.random.PRNGKey(seed)
+        self._zero_key = jax.random.PRNGKey(0)
+
+        self._prefill = jax.jit(
+            lambda p, batch: D.prefill(cfg, p, batch, pad_to=max_len))
+        self._decode = jax.jit(
+            lambda p, batch, cache: D.decode_step(cfg, p, batch, cache))
+        self._insert = jax.jit(D.cache_insert_row)
+        self._sample = jax.jit(
+            lambda logits, key: sample_token(logits, key, self.temperature))
+
+    # -- input plumbing ----------------------------------------------------
+
+    def _next_key(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def _sample_key(self):
+        """Greedy sampling ignores the key — skip the per-token split."""
+        return self._zero_key if self.temperature <= 0.0 else self._next_key()
+
+    def _positions(self, pos_row):
+        positions = jnp.asarray(pos_row, jnp.int32)[:, None]      # [B, 1]
+        if self.cfg.mrope:
+            positions = jnp.broadcast_to(
+                positions, (3,) + positions.shape)                # [3, B, 1]
+        return positions
+
+    def _prefill_batch(self, req: Request):
+        batch = {}
+        if self.cfg.embed_inputs:
+            batch["embeds"] = jnp.asarray(req.embeds)[None]
+        else:
+            batch["tokens"] = jnp.asarray(req.tokens, jnp.int32)[None]
+        if self.cfg.mrope:
+            pos = jnp.arange(req.prompt_len, dtype=jnp.int32)[None]
+            batch["positions"] = jnp.broadcast_to(
+                pos, (3, 1, req.prompt_len))
+        return batch
+
+    def _decode_batch(self, tokens_row, pos_row):
+        batch = {"positions": self._positions(pos_row)}
+        if self.cfg.embed_inputs:
+            # placeholder frontend: fresh embeds each step (fresh key per
+            # step — a reused key would feed identical inputs every step)
+            batch["embeds"] = jax.random.normal(
+                self._next_key(), (self.num_slots, 1, self.cfg.d_model),
+                jnp.dtype(self.cfg.dtype))
+        else:
+            batch["tokens"] = jnp.asarray(tokens_row, jnp.int32)[:, None]
+        return batch
+
+    # -- serve loop --------------------------------------------------------
+
+    def run(self, requests: list[Request], verbose: bool = False) -> ServeStats:
+        for r in requests:
+            assert r.max_new_tokens >= 1, (
+                f"request {r.rid}: max_new_tokens must be >= 1")
+            assert r.prompt_len + r.max_new_tokens <= self.max_len, (
+                f"request {r.rid}: prompt {r.prompt_len} + gen "
+                f"{r.max_new_tokens} exceeds max_len {self.max_len}")
+        sched = Scheduler(self.num_slots, eos_id=self.eos_id)
+        for r in requests:
+            sched.submit(r)
+
+        cache = D.init_cache(self.cfg, self.num_slots, self.max_len)
+        results: dict[int, RequestResult] = {}
+        t0 = time.perf_counter()
+
+        def finish(slot):
+            results[slot.request.rid] = RequestResult(
+                slot.request.rid, list(slot.out_tokens),
+                time.perf_counter() - t0)
+            if verbose:
+                print(f"[serve] completed {sched.requests_completed}"
+                      f"/{len(requests)} requests")
+
+        while not sched.done:
+            # 1) refill every free slot from the queue (per-slot admission)
+            while (adm := sched.next_admission()) is not None:
+                slot, req = adm
+                logits, row_cache = self._prefill(
+                    self.params, self._prefill_batch(req))
+                cache = self._insert(cache, row_cache, slot.index)
+                first = int(self._sample(logits, self._sample_key())[0])
+                if sched.record_token(slot, first):
+                    finish(slot)
+
+            active = sched.active_slots()
+            if not active:
+                continue    # everything admitted finished at prefill
+
+            # 2) one decode step over the full fixed-shape batch; each slot
+            # consumes its last sampled token at position slot.pos
+            tokens_row = [s.last_token for s in sched.slots]
+            pos_row = [min(s.pos, self.max_len - 1) for s in sched.slots]
+            logits, cache = self._decode(
+                self.params, self._decode_batch(tokens_row, pos_row), cache)
+            toks = np.asarray(self._sample(logits, self._sample_key()))
+            for slot in active:           # FREE rows: sampled but discarded
+                slot.pos += 1             # the fed token is now cached
+                if sched.record_token(slot, int(toks[slot.index])):
+                    finish(slot)
+
+        wall = time.perf_counter() - t0
+        lat = [r.latency_s for r in results.values()] or [0.0]
+        return ServeStats(
+            requests_completed=sched.requests_completed,
+            tokens_out=sched.tokens_out,
+            wall_s=wall,
+            tok_per_s=sched.tokens_out / max(wall, 1e-9),
+            latency_p50_s=float(np.percentile(lat, 50)),
+            latency_p95_s=float(np.percentile(lat, 95)),
+            refills=sched.refills,
+            results=results,
+        )
+
+
+def make_random_requests(cfg, n: int, prompt_len: int, gen_len: int,
+                         seed: int = 0) -> list[Request]:
+    """Uniform-random prompts (token ids, or embeds for embed-input
+    frontends) — the synthetic serving workload."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for rid in range(n):
+        if cfg.embed_inputs:
+            emb = rng.standard_normal(
+                (prompt_len, cfg.d_model)).astype(np.float32)
+            reqs.append(Request(rid, gen_len, embeds=emb))
+        else:
+            toks = rng.integers(
+                0, cfg.vocab_size, prompt_len).astype(np.int32)
+            reqs.append(Request(rid, gen_len, tokens=toks))
+    return reqs

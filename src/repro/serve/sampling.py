@@ -1,0 +1,19 @@
+"""Token sampling for the serving engine: greedy + temperature.
+
+`temperature` is static (baked into the jitted step): <= 0 means greedy
+argmax; > 0 scales the logits and draws from the categorical. Per-step keys
+are split by the engine so consecutive steps never reuse randomness.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_token(logits, key, temperature: float = 0.0):
+    """logits [B, V] -> token ids [B] (int32)."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, logits.astype(jnp.float32) / temperature, axis=-1
+    ).astype(jnp.int32)

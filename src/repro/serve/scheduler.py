@@ -1,0 +1,112 @@
+"""Slot scheduler for continuous batching.
+
+Pure-python state machine, no jax: the engine asks it which slots to refill
+and reports sampled tokens back; the scheduler decides admission and
+completion. Slot indices are batch rows of the engine's cache.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import enum
+from typing import Optional
+
+import numpy as np
+
+
+class SlotState(enum.Enum):
+    FREE = "free"
+    ACTIVE = "active"
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request. `tokens` for token-input models, `embeds`
+    ([prompt_len, d_model]) for embed-input frontends (musicgen-style)."""
+    rid: int
+    max_new_tokens: int
+    tokens: Optional[np.ndarray] = None
+    embeds: Optional[np.ndarray] = None
+
+    @property
+    def prompt_len(self) -> int:
+        src = self.tokens if self.tokens is not None else self.embeds
+        return int(src.shape[0])
+
+
+@dataclasses.dataclass
+class Slot:
+    index: int
+    state: SlotState = SlotState.FREE
+    request: Optional[Request] = None
+    # position of the next token to *consume* == tokens cached so far. A
+    # freshly sampled token has NOT been cached yet: the engine advances
+    # pos only after the decode step that consumes it (feeding the sampled
+    # token at RoPE position `pos`), never at sampling time.
+    pos: int = 0
+    generated: int = 0        # tokens sampled for the current request
+    last_token: int = 0       # fed to the next decode step
+    out_tokens: list = dataclasses.field(default_factory=list)
+
+
+class Scheduler:
+    """FIFO admission over a fixed slot set.
+
+    The engine drives it with three calls per iteration:
+    `next_admission()` until None (slot, request pairs to prefill),
+    `active_slots()` for the decode mask, and `record_token(slot, tok)`
+    after sampling — which returns True when the request completed.
+    """
+
+    def __init__(self, num_slots: int, eos_id: Optional[int] = None):
+        self.slots = [Slot(i) for i in range(num_slots)]
+        self.queue: collections.deque[Request] = collections.deque()
+        self.eos_id = eos_id
+        self.requests_completed = 0
+        self.tokens_out = 0
+        self.refills = 0          # admissions into a previously-used slot
+
+    def submit(self, request: Request) -> None:
+        self.queue.append(request)
+
+    def next_admission(self):
+        """Pop (slot, request) to admit, or None if no free slot or empty
+        queue. A slot finished on a previous iteration is handed out here
+        immediately — the batch is never drained."""
+        if not self.queue:
+            return None
+        for slot in self.slots:
+            if slot.state is SlotState.FREE:
+                req = self.queue.popleft()
+                if slot.request is not None:
+                    self.refills += 1
+                slot.state = SlotState.ACTIVE
+                slot.request = req
+                slot.pos = req.prompt_len
+                slot.generated = 0
+                slot.out_tokens = []
+                return slot, req
+        return None
+
+    def active_slots(self) -> list[Slot]:
+        return [s for s in self.slots if s.state is SlotState.ACTIVE]
+
+    def record_token(self, slot: Slot, token: int) -> bool:
+        """Account one sampled token for an ACTIVE slot; finish the request
+        on max_new_tokens or EOS. Returns True iff the request completed."""
+        assert slot.state is SlotState.ACTIVE
+        slot.out_tokens.append(token)
+        slot.last_token = token
+        slot.generated += 1
+        self.tokens_out += 1
+        done = slot.generated >= slot.request.max_new_tokens
+        if self.eos_id is not None and token == self.eos_id:
+            done = True
+        if done:
+            slot.state = SlotState.FREE
+            self.requests_completed += 1
+        return done
+
+    @property
+    def done(self) -> bool:
+        return not self.queue and not self.active_slots()
