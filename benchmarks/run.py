@@ -6,14 +6,22 @@
     fig4_weights_updated Paper Fig. 4 (coverage: dynamic >> fixed; ~2%/iter)
     pruning_table      Paper §IV-B   (channel/pattern sparsity, FLOPs)
     memory_table       Paper's 98% feature-memory claim, per-arch
-    kernel_micro       Pallas kernel oracles + compute-skip ratios
+    kernel_micro       Pallas kernel oracles + fused-vs-loop + skip ratios
 
     PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Modules that expose a BENCH_JSON name and a RECORDS list (kernel_micro ->
+BENCH_kernels.json) additionally get their machine-readable records dumped
+to that file at the repo root, so the perf trajectory is tracked across PRs.
 """
 import argparse
 import importlib
+import json
+import pathlib
 import sys
 import traceback
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 MODULES = [
     "fig4_weights_updated",
@@ -37,6 +45,12 @@ def main() -> None:
             mod = importlib.import_module(f"benchmarks.{name}")
             for row in mod.run():
                 print(",".join(str(x) for x in row), flush=True)
+            json_name = getattr(mod, "BENCH_JSON", None)
+            records = getattr(mod, "RECORDS", None)
+            if json_name and records:
+                path = _ROOT / json_name
+                path.write_text(json.dumps(records, indent=1) + "\n")
+                print(f"# wrote {path}", file=sys.stderr, flush=True)
         except Exception:  # noqa: BLE001
             failed += 1
             traceback.print_exc()

@@ -217,6 +217,15 @@ def compact_dw(x2, dy2, idx, spec: SelSpec):
     if kernels_enabled():
         from repro.kernels import ops as kops
         return kops.block_sparse_dw(x2, dy2, idx, spec)
+    if spec.n_sel == spec.n_blocks:
+        # full selection: the gather is a pure permutation, so let the einsum
+        # consume a reshaped VIEW of dy2 and reorder the (M-times smaller)
+        # output instead of materializing a gathered copy of the activations
+        dyb = dy2.reshape(dy2.shape[0], spec.n_shards, spec.n_blocks,
+                          spec.block)
+        dw_all = jnp.einsum("mk,msnb->ksnb", x2, dyb,
+                            preferred_element_type=jnp.float32)
+        return jnp.take_along_axis(dw_all, idx[None, :, :, None], axis=2)
     dy_sel = _gather_blocks(dy2, idx, spec)
     return jnp.einsum("mk,msnb->ksnb", x2, dy_sel,
                       preferred_element_type=jnp.float32)

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: block-sparse weight-gradient matmul.
+"""Pallas TPU kernel: block-sparse weight-gradient matmul, single launch.
 
 The paper's core compute saving — dW is computed ONLY for selected output-
 channel blocks. The selected block indices are scalar-prefetched so the
@@ -7,13 +7,20 @@ column block; unselected blocks are never read, computed, or written
 (compute AND HBM traffic skipped by construction — the TPU-native analogue
 of the paper's skipped gradient loops).
 
-    x:   [M, K]      activations (fan-in K)
-    dy:  [M, N]      upstream gradient (N output channels)
-    idx: [n_sel]     selected channel-block indices (N = n_blocks * block)
-    out: [n_sel, block, K]   compact dW for the selected blocks (fp32)
+ONE `pallas_call` covers every TP shard: the grid spans shards as well as
+selected blocks, and the scalar-prefetched [n_shards, n_sel] index table
+routes the dY BlockSpec to `shard_base + idx[s, j]`. The output is emitted
+directly in the framework's compact layout — no Python shard loop, no
+post-hoc stack/transpose in `ops.py` (PR 1 launched one kernel per shard
+and reassembled on the host side of the trace).
 
-Grid: (n_sel, K/TK, M/TM); M is the contraction ("arbitrary") dimension,
-accumulated into the output block in VMEM across the innermost grid axis.
+    x:   [M, K]            activations (fan-in K)
+    dy:  [M, N]            upstream gradient (N = n_shards * n_blocks * block)
+    idx: [n_shards, n_sel] selected block indices, local to each shard
+    out: [K, n_shards, n_sel, block]   compact dW (fp32)
+
+Grid: (n_shards, n_sel, K/TK, M/TM); M is the contraction ("arbitrary")
+innermost dimension, accumulated into a VMEM scratch across grid steps.
 MXU alignment: block and TK should be multiples of 128 on real hardware
 (full configs use channel_block=128); interpret-mode tests sweep smaller
 shapes against the ref.py oracle.
@@ -31,7 +38,7 @@ from repro.compat import pallas_compiler_params
 
 
 def _kernel(idx_ref, x_ref, dy_ref, out_ref, acc_ref, *, n_m: int):
-    mi = pl.program_id(2)
+    mi = pl.program_id(3)
 
     @pl.when(mi == 0)
     def _init():
@@ -40,43 +47,50 @@ def _kernel(idx_ref, x_ref, dy_ref, out_ref, acc_ref, *, n_m: int):
     x = x_ref[...].astype(jnp.float32)      # [TM, TK]
     dy = dy_ref[...].astype(jnp.float32)    # [TM, block]
     acc_ref[...] += jax.lax.dot_general(
-        dy, x, (((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)  # [block, TK]
+        x, dy, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)  # [TK, block]
 
     @pl.when(mi == n_m - 1)
     def _flush():
-        out_ref[...] = acc_ref[...][None]
+        out_ref[...] = acc_ref[...][:, None, None, :]
 
 
 def block_sparse_dw_kernel(x, dy, idx, *, block: int, tm: int = 128,
                            tk: int = 128, interpret: bool = False):
-    """Compact dW: [n_sel, block, K] fp32. Shapes must divide tiles."""
+    """Compact dW: [K, n_shards, n_sel, block] fp32, one launch for all
+    shards. idx: [n_shards, n_sel]. Shapes must divide tiles."""
     m, k = x.shape
     n = dy.shape[1]
-    n_sel = idx.shape[0]
+    n_shards, n_sel = idx.shape
     tm = min(tm, m)
     tk = min(tk, k)
-    assert m % tm == 0 and k % tk == 0 and n % block == 0
+    assert m % tm == 0 and k % tk == 0 and n % (n_shards * block) == 0
+    n_blocks = n // (n_shards * block)   # blocks per shard
     n_m = m // tm
 
-    grid = (n_sel, k // tk, n_m)
+    grid = (n_shards, n_sel, k // tk, n_m)
     out = pl.pallas_call(
         functools.partial(_kernel, n_m=n_m),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((tm, tk), lambda si, ki, mi, idx_ref: (mi, ki)),
+                pl.BlockSpec((tm, tk),
+                             lambda si, ji, ki, mi, idx_ref: (mi, ki)),
                 pl.BlockSpec((tm, block),
-                             lambda si, ki, mi, idx_ref: (mi, idx_ref[si])),
+                             lambda si, ji, ki, mi, idx_ref:
+                             (mi, si * n_blocks + idx_ref[si, ji])),
             ],
             out_specs=pl.BlockSpec(
-                (1, block, tk), lambda si, ki, mi, idx_ref: (si, 0, ki)),
-            scratch_shapes=[pltpu.VMEM((block, tk), jnp.float32)],
+                (tk, 1, 1, block),
+                lambda si, ji, ki, mi, idx_ref: (ki, si, ji, 0)),
+            scratch_shapes=[pltpu.VMEM((tk, block), jnp.float32)],
         ),
-        out_shape=jax.ShapeDtypeStruct((n_sel, block, k), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((k, n_shards, n_sel, block),
+                                       jnp.float32),
         compiler_params=pallas_compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
         interpret=interpret,
     )(idx, x, dy)
     return out

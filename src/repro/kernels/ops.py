@@ -3,10 +3,14 @@
 On CPU (no TPU backend) the kernels run in interpret mode — the Pallas body
 executes exactly as it would be staged for TPU, validating index maps and
 block logic. On TPU the same call compiles to Mosaic.
+
+Every logical op here is ONE `pallas_call`: the dW, writeback, and fused
+optimizer kernels take the whole stacked leaf (all trainable scan-steps and
+all TP shards) in a single grid launch — the lowered compact train step
+contains a constant number of kernel launches per selectable weight leaf
+(verified by `launch.hlo_analysis.kernel_launch_count`).
 """
 from __future__ import annotations
-
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -19,29 +23,31 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _pick_tile(r: int, cap: int = 256) -> int:
+    """Largest divisor of r that is <= cap (grid tile along a lead dim)."""
+    for d in range(min(r, cap), 0, -1):
+        if r % d == 0:
+            return d
+    return 1
+
+
 def block_sparse_dw(x2, dy2, idx, spec):
     """compact_dw kernel entry (see core.sparse_update.compact_dw).
 
     x2: [M, K], dy2: [M, N], idx: [n_shards, n_sel] ->
-    [K, n_shards, n_sel, block] fp32 (matches the jnp path layout).
+    [K, n_shards, n_sel, block] fp32, in ONE launch for all shards.
     """
-    n_shards, n_sel = idx.shape
     m, k = x2.shape
-    n = dy2.shape[1]
-    loc = n // n_shards
-    outs = []
-    for s in range(n_shards):  # dry-run path is jnp; kernel used per device
-        dy_s = dy2[:, s * loc: (s + 1) * loc]
-        out = block_sparse_dw_kernel(x2, dy_s, idx[s], block=spec.block,
-                                     interpret=_interpret())
-        outs.append(out)                          # [n_sel, block, K]
-    stacked = jnp.stack(outs, axis=0)             # [n_shards, n_sel, block, K]
-    return jnp.transpose(stacked, (3, 0, 1, 2))   # [K, n_shards, n_sel, block]
+    return block_sparse_dw_kernel(x2, dy2, idx, block=spec.block,
+                                  tm=_pick_tile(m, 128),
+                                  tk=_pick_tile(k, 128),
+                                  interpret=_interpret())
 
 
 def block_scatter_update(w, vals, idx, spec):
     """Compact-path weight writeback (see core.sparse_update): overwrite the
-    selected blocks of a stacked leaf with their updated values.
+    selected blocks of a stacked leaf with their updated values, in ONE
+    aliased launch over (K, n_shards, n_sel, rows).
 
     w:    [K, *lead, N]                 (N = n_shards * n_blocks * block)
     vals: [K, *lead, n_shards, n_sel, block]
@@ -50,31 +56,53 @@ def block_scatter_update(w, vals, idx, spec):
     from repro.kernels.scatter_blocks import block_scatter_update_kernel
 
     k = w.shape[0]
-    lead = w.shape[1:-1]
+    n = w.shape[-1]
     r = 1
-    for d in lead:
+    for d in w.shape[1:-1]:
         r *= d
-    tr = r if r < 256 else max(d for d in (256, 128, 64, 32, 16, 8, 4, 2, 1)
-                               if r % d == 0)
-    loc = spec.n_blocks * spec.block
-    outs = []
-    for kk in range(k):       # K (trainable steps) and shards are tiny loops
-        wk = w[kk].reshape(r, spec.n_shards, loc)
-        vk = vals[kk].reshape(r, spec.n_shards, spec.n_sel, spec.block)
-        shards = [block_scatter_update_kernel(wk[:, s], vk[:, s], idx[kk, s],
-                                              tr=tr, interpret=_interpret())
-                  for s in range(spec.n_shards)]
-        outs.append(jnp.stack(shards, axis=1).reshape(w.shape[1:]))
-    return jnp.stack(outs, axis=0)
+    w3 = w.reshape(k, r, n)
+    v5 = vals.reshape(k, r, spec.n_shards, spec.n_sel, spec.block)
+    out = block_scatter_update_kernel(w3, v5, idx, tr=_pick_tile(r),
+                                      interpret=_interpret())
+    return out.reshape(w.shape)
+
+
+def fused_block_optimizer(oc, p, g_sel, idx, spec, mu, nu, lr, t):
+    """`optim.apply_updates_mixed`'s selectable-leaf rule as ONE in-place
+    kernel: gather + SGD/momentum/AdamW block rule + writeback fused, with
+    the optimizer-state blocks updated in the same pass.
+
+    p: [K, *lead, N]; g_sel: [K, *lead, n_shards, n_sel, block];
+    idx: [K, n_shards, n_sel]; mu/nu: fp32 like p or None.
+    Returns (p', mu', nu') with None for absent state.
+    """
+    from repro.kernels.fused_block_opt import fused_block_opt_kernel
+
+    kind = "adamw" if nu is not None else \
+        ("momentum" if mu is not None else "sgd")
+    k = p.shape[0]
+    n = p.shape[-1]
+    r = 1
+    for d in p.shape[1:-1]:
+        r *= d
+    p3 = p.reshape(k, r, n)
+    g5 = g_sel.reshape(k, r, spec.n_shards, spec.n_sel, spec.block)
+    mu3 = mu.reshape(k, r, n) if mu is not None else None
+    nu3 = nu.reshape(k, r, n) if nu is not None else None
+    w_new, mu_new, nu_new = fused_block_opt_kernel(
+        p3, g5, idx, lr, t, mu3, nu3, kind=kind, momentum=oc.momentum,
+        beta1=oc.beta1, beta2=oc.beta2, eps=oc.eps,
+        weight_decay=oc.weight_decay, tr=_pick_tile(r),
+        interpret=_interpret())
+    return (w_new.reshape(p.shape),
+            mu_new.reshape(p.shape) if mu_new is not None else None,
+            nu_new.reshape(p.shape) if nu_new is not None else None)
 
 
 def block_act_prune(x, threshold: float = 0.15, block: int = 2):
     shape = x.shape
     x2 = x.reshape(-1, shape[-1])
-    r = x2.shape[0]
-    # pick dividing tiles
-    tr = r if r < 256 else max(d for d in (256, 128, 64, 32, 16, 8, 4, 2, 1)
-                               if r % d == 0)
+    tr = _pick_tile(x2.shape[0])
     c = shape[-1]
     tc = c if c < 512 else max(d for d in (512, 256, 128, 64) if c % d == 0)
     out = block_act_prune_kernel(x2, threshold=threshold, block=block,

@@ -8,14 +8,20 @@ TPU the update is a true in-place write touching n_sel/n_blocks of the
 tensor — HBM traffic proportional to the selection ratio, the memory-side
 twin of `masked_dw`'s compute skip.
 
-    w:   [R, N]              full weight, rows = flattened non-out dims
-    upd: [R, n_sel, block]   updated values for the selected blocks
-    idx: [n_sel]             selected block indices (N = n_blocks * block)
-    out: [R, N]              w with out[:, idx[s]] block <- upd[:, s]
+ONE `pallas_call` covers the whole stacked leaf: the grid spans the K
+trainable scan-steps AND the TP shards (PR 1 launched K x n_shards
+separate 2D kernels from a Python loop), with the scalar-prefetched
+[K, n_shards, n_sel] index table routing each grid step's output block to
+`shard_base + idx[k, s, j]`.
 
-Grid: (n_sel, R/TR); the scalar-prefetched idx routes each grid step's
-output block straight to its selected column block. If idx contains
-duplicates the highest grid step wins (grid dim 0 is "arbitrary", i.e.
+    w:   [K, R, N]                     stacked weight, R = flattened non-out
+                                       dims, N = n_shards * n_blocks * block
+    upd: [K, R, n_shards, n_sel, block]  updated values for selected blocks
+    idx: [K, n_shards, n_sel]          selected block indices, shard-local
+    out: [K, R, N]                     w with the selected blocks overwritten
+
+Grid: (K, n_shards, n_sel, R/TR). If idx contains duplicates within a
+(k, shard) the highest grid step wins (the sel dims are "arbitrary", i.e.
 sequential) — selection never produces duplicates within a shard.
 """
 from __future__ import annotations
@@ -30,36 +36,44 @@ from repro.compat import pallas_compiler_params
 
 def _kernel(idx_ref, w_ref, upd_ref, out_ref):
     del idx_ref, w_ref
-    out_ref[...] = upd_ref[:, 0, :].astype(out_ref.dtype)
+    out_ref[...] = upd_ref[:, :, 0, 0, :].astype(out_ref.dtype)
 
 
 def block_scatter_update_kernel(w, upd, idx, *, tr: int = 256,
                                 interpret: bool = False):
     """out = w with blocks idx overwritten by upd. Shapes as module doc."""
-    r, n = w.shape
-    n_sel, block = upd.shape[1], upd.shape[2]
-    assert n % block == 0 and upd.shape[0] == r and idx.shape == (n_sel,)
+    k, r, n = w.shape
+    n_shards, n_sel = idx.shape[1], idx.shape[2]
+    block = upd.shape[-1]
+    assert upd.shape == (k, r, n_shards, n_sel, block)
+    assert idx.shape == (k, n_shards, n_sel)
+    assert n % (n_shards * block) == 0
+    n_blocks = n // (n_shards * block)   # blocks per shard
     tr = min(tr, r)
     assert r % tr == 0
 
-    grid = (n_sel, r // tr)
+    grid = (k, n_shards, n_sel, r // tr)
+    out_spec = pl.BlockSpec(
+        (1, tr, block),
+        lambda kk, si, ji, ri, idx_ref:
+        (kk, ri, si * n_blocks + idx_ref[kk, si, ji]))
     return pl.pallas_call(
         _kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((tr, block), lambda si, ri, idx_ref:
-                             (ri, idx_ref[si])),
-                pl.BlockSpec((tr, 1, block), lambda si, ri, idx_ref:
-                             (ri, si, 0)),
+                out_spec,
+                pl.BlockSpec((1, tr, 1, 1, block),
+                             lambda kk, si, ji, ri, idx_ref:
+                             (kk, ri, si, ji, 0)),
             ],
-            out_specs=pl.BlockSpec((tr, block), lambda si, ri, idx_ref:
-                                   (ri, idx_ref[si])),
+            out_specs=out_spec,
         ),
-        out_shape=jax.ShapeDtypeStruct((r, n), w.dtype),
+        out_shape=jax.ShapeDtypeStruct((k, r, n), w.dtype),
         input_output_aliases={1: 0},   # w aliases out: unselected blocks kept
         compiler_params=pallas_compiler_params(
-            dimension_semantics=("arbitrary", "parallel")),
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary",
+                                 "parallel")),
         interpret=interpret,
     )(idx, w, upd)

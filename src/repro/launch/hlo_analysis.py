@@ -353,6 +353,63 @@ def weight_gradient_scatters(text: str, specs) -> list[dict]:
             if len(r["shape"]) >= 3 and tuple(r["shape"][-3:]) in sigs]
 
 
+# ---------------------------------------------------------------------------
+# kernel-launch counting (fused compact-path verification)
+# ---------------------------------------------------------------------------
+#
+# PR 1's compact path issued one pallas_call per TP shard for the sparse dW
+# and K x n_shards calls for the block writeback; the fused kernels (PR 3)
+# must lower to a CONSTANT number of launch sites per selectable weight
+# leaf. On TPU each pallas_call appears in the compiled HLO as a
+# tpu_custom_call/Mosaic custom-call; on CPU (interpret mode) the kernel is
+# inlined into plain HLO, so the detector also counts `pallas_call`
+# equations directly in the jaxpr — backend-independent and what CI runs.
+
+_KERNEL_CALL_RE = re.compile(
+    r"custom[-_]call[^\n]*?(?:tpu_custom_call|mosaic|pallas)", re.I)
+
+
+def _iter_sub_jaxprs(val):
+    import jax.core as jc
+    if isinstance(val, jc.ClosedJaxpr):
+        yield val.jaxpr
+    elif isinstance(val, jc.Jaxpr):
+        yield val
+    elif isinstance(val, (list, tuple)):
+        for v in val:
+            yield from _iter_sub_jaxprs(v)
+
+
+def _count_pallas_eqns(jaxpr) -> int:
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+            continue   # the kernel body jaxpr holds no further launches
+        for val in eqn.params.values():
+            for sub in _iter_sub_jaxprs(val):
+                n += _count_pallas_eqns(sub)
+    return n
+
+
+def kernel_launch_count(obj) -> int:
+    """Static Pallas/Mosaic kernel-launch sites in a lowered train step.
+
+    `obj` is either compiled/lowered HLO text (counts tpu_custom_call /
+    Mosaic / pallas custom-calls — the TPU path) or a jaxpr / ClosedJaxpr
+    (counts `pallas_call` equations recursively through scan/while/pjit
+    bodies — the backend-independent path CI uses, since interpret-mode
+    lowering inlines kernels into plain HLO). Each site is one compiled
+    kernel; a site inside a scan body launches once per trip but the count
+    stays O(1) in the trip count — the fused compact path must show a
+    constant number of sites per selectable weight leaf, not
+    O(K x n_shards)."""
+    if isinstance(obj, str):
+        return len(_KERNEL_CALL_RE.findall(obj))
+    jaxpr = getattr(obj, "jaxpr", obj)      # ClosedJaxpr -> Jaxpr
+    return _count_pallas_eqns(jaxpr)
+
+
 def while_trip_counts(text: str) -> list[int]:
     comps = parse_hlo(text)
     out = []

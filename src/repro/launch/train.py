@@ -85,7 +85,8 @@ def main(argv=None):
         print(f"[train] DGSU plan: trainable steps/segment={plan.seg_trainable} "
               f"ratio={args.update_ratio} -> "
               f"{100*selected_fraction(plan, cfg):.2f}% of params per iter")
-    step_fn = jax.jit(make_train_step(tc, plan), donate_argnums=(0,))
+    step_raw = make_train_step(tc, plan, donate=True)
+    step_fn = jax.jit(step_raw, donate_argnums=step_raw.donate_argnums)
 
     start = 0
     mgr = None

@@ -27,7 +27,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import OptimizerConfig
 from repro.core.sparse_update import (SelSpec, gather_param_blocks,
-                                      scatter_param_blocks)
+                                      kernels_enabled, scatter_param_blocks)
 
 
 def learning_rate(oc: OptimizerConfig, step) -> jnp.ndarray:
@@ -151,6 +151,12 @@ def apply_updates_mixed(oc: OptimizerConfig, params, grads, compact_grads,
             (grads, compact_grads), oc.grad_clip)
 
     def leaf_compact(p, g_sel, idx, spec, mu, nu):
+        if kernels_enabled():
+            # one in-place Pallas launch: gather + rule + writeback fused,
+            # optimizer state updated in the same pass
+            from repro.kernels import ops as kops
+            return kops.fused_block_optimizer(oc, p, g_sel, idx, spec,
+                                              mu, nu, lr, t)
         p_sel = gather_param_blocks(p, idx, spec)
         mu_sel = gather_param_blocks(mu, idx, spec) if mu is not None else None
         nu_sel = gather_param_blocks(nu, idx, spec) if nu is not None else None

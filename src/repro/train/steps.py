@@ -100,6 +100,12 @@ def make_train_step(tc: TrainConfig, plan: SelectionPlan,
                     compact_grads: Optional[bool] = None):
     """Returns a jit-able train_step(state, batch) -> (state, metrics).
 
+    donate: whether the caller should donate the state argument when jitting
+    (the returned function carries the matching `donate_argnums` attribute —
+    jit as `jax.jit(fn, donate_argnums=fn.donate_argnums)` so the old
+    state's buffers are reused in place; pass donate=False when the same
+    input state must stay live across calls, e.g. A/B comparisons).
+
     compact_grads (default: tc.compact_grads) routes every segment weight
     with a SelSpec through the compact-gradient path: the backward emits the
     [K, n_shards, n_sel, block] dW directly (no full-shape zero-buffer
@@ -174,4 +180,5 @@ def make_train_step(tc: TrainConfig, plan: SelectionPlan,
         metrics["loss"] = loss
         return new_state, metrics
 
+    train_step.donate_argnums = (0,) if donate else ()
     return train_step

@@ -1,5 +1,11 @@
 """Pallas kernel validation: shape/dtype sweeps against the ref.py oracles
-(interpret mode executes the kernel body exactly as staged for TPU)."""
+(interpret mode executes the kernel body exactly as staged for TPU).
+
+The fused single-launch kernels (PR 3) are swept across n_shards in
+{1, 2, 4}, stacked K in {1, 3}, odd n_sel, and bf16/f32 params; the fused
+optimizer is bitwise vs the un-fused oracle for SGD and allclose for
+momentum/AdamW.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,25 +14,36 @@ from repro.testing import given, settings, st
 
 from repro.kernels import ref
 from repro.kernels.block_act_prune import block_act_prune_kernel
+from repro.kernels.fused_block_opt import fused_block_opt_kernel
 from repro.kernels.masked_dw import block_sparse_dw_kernel
+from repro.kernels.scatter_blocks import block_scatter_update_kernel
+
+
+def _sel_idx(rng, lead_shape, n_blocks, n_sel):
+    """Random no-duplicate selection of shape [*lead_shape, n_sel]."""
+    flat = [rng.choice(n_blocks, n_sel, replace=False)
+            for _ in range(int(np.prod(lead_shape)))]
+    return jnp.asarray(np.stack(flat).reshape(lead_shape + (n_sel,)),
+                       jnp.int32)
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-@pytest.mark.parametrize("m,k,n,block,tm,tk", [
-    (64, 32, 64, 16, 32, 16),
-    (128, 64, 96, 32, 64, 64),
-    (256, 128, 128, 128, 128, 128),   # MXU-aligned full-config shape
-    (32, 16, 48, 8, 32, 16),
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+@pytest.mark.parametrize("m,k,nb,block,n_sel,tm,tk", [
+    (64, 32, 4, 16, 3, 32, 16),       # odd n_sel
+    (128, 64, 3, 32, 2, 64, 64),
+    (256, 128, 2, 128, 1, 128, 128),  # MXU-aligned full-config block
+    (32, 16, 6, 8, 5, 32, 16),        # odd n_sel
 ])
-def test_block_sparse_dw_sweep(dtype, m, k, n, block, tm, tk):
-    rng = np.random.default_rng(m * 7 + n)
+def test_block_sparse_dw_sweep(dtype, n_shards, m, k, nb, block, n_sel, tm, tk):
+    rng = np.random.default_rng(m * 7 + nb * n_shards)
+    n = n_shards * nb * block
     x = jnp.asarray(rng.normal(size=(m, k)), dtype)
     dy = jnp.asarray(rng.normal(size=(m, n)), dtype)
-    n_blocks = n // block
-    n_sel = max(1, n_blocks // 2)
-    idx = jnp.asarray(rng.choice(n_blocks, n_sel, replace=False), jnp.int32)
+    idx = _sel_idx(rng, (n_shards,), nb, n_sel)
     out = block_sparse_dw_kernel(x, dy, idx, block=block, tm=tm, tk=tk,
                                  interpret=True)
+    assert out.shape == (k, n_shards, n_sel, block)
     want = ref.block_sparse_dw_ref(x, dy, idx, block)
     tol = 1e-5 if dtype == jnp.float32 else 2e-2
     np.testing.assert_allclose(np.asarray(out, np.float32),
@@ -37,17 +54,17 @@ def test_block_sparse_dw_sweep(dtype, m, k, n, block, tm, tk):
 @settings(max_examples=15, deadline=None)
 @given(
     m_t=st.integers(1, 4), k_t=st.integers(1, 4),
-    nb=st.integers(2, 6), blk=st.sampled_from([8, 16]),
-    seed=st.integers(0, 2**31 - 1),
+    s=st.sampled_from([1, 2, 4]), nb=st.integers(2, 6),
+    blk=st.sampled_from([8, 16]), seed=st.integers(0, 2**31 - 1),
 )
-def test_block_sparse_dw_property(m_t, k_t, nb, blk, seed):
+def test_block_sparse_dw_property(m_t, k_t, s, nb, blk, seed):
     rng = np.random.default_rng(seed)
     m, k = 32 * m_t, 16 * k_t
-    n = nb * blk
+    n = s * nb * blk
     x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
     dy = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
     n_sel = int(rng.integers(1, nb + 1))
-    idx = jnp.asarray(rng.choice(nb, n_sel, replace=False), jnp.int32)
+    idx = _sel_idx(rng, (s,), nb, n_sel)
     out = block_sparse_dw_kernel(x, dy, idx, block=blk, tm=32, tk=16,
                                  interpret=True)
     want = ref.block_sparse_dw_ref(x, dy, idx, blk)
@@ -56,18 +73,22 @@ def test_block_sparse_dw_property(m_t, k_t, nb, blk, seed):
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("k_steps", [1, 3])
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
 @pytest.mark.parametrize("r,nb,blk,n_sel,tr", [
-    (32, 8, 8, 3, 32),
+    (32, 8, 8, 3, 32),        # odd n_sel
     (64, 4, 16, 2, 32),
-    (128, 16, 128, 8, 128),   # MXU-aligned full-config shape
-    (256, 6, 8, 6, 256),      # full selection: every block overwritten
+    (128, 2, 128, 1, 128),    # MXU-aligned full-config block
+    (48, 6, 8, 6, 16),        # full selection: every block overwritten
 ])
-def test_block_scatter_update_sweep(dtype, r, nb, blk, n_sel, tr):
-    from repro.kernels.scatter_blocks import block_scatter_update_kernel
-    rng = np.random.default_rng(r * 3 + nb)
-    w = jnp.asarray(rng.normal(size=(r, nb * blk)), dtype)
-    upd = jnp.asarray(rng.normal(size=(r, n_sel, blk)), dtype)
-    idx = jnp.asarray(rng.choice(nb, n_sel, replace=False), jnp.int32)
+def test_block_scatter_update_sweep(dtype, k_steps, n_shards, r, nb, blk,
+                                    n_sel, tr):
+    rng = np.random.default_rng(r * 3 + nb + k_steps * n_shards)
+    n = n_shards * nb * blk
+    w = jnp.asarray(rng.normal(size=(k_steps, r, n)), dtype)
+    upd = jnp.asarray(rng.normal(size=(k_steps, r, n_shards, n_sel, blk)),
+                      dtype)
+    idx = _sel_idx(rng, (k_steps, n_shards), nb, n_sel)
     out = block_scatter_update_kernel(w, upd, idx, tr=tr, interpret=True)
     want = ref.block_scatter_update_ref(w, upd, idx, blk)
     # pure write routing — must be exact in any dtype
@@ -76,21 +97,98 @@ def test_block_scatter_update_sweep(dtype, r, nb, blk, n_sel, tr):
 
 
 @given(
+    k_steps=st.sampled_from([1, 3]), s=st.sampled_from([1, 2, 4]),
     r_t=st.integers(1, 4), nb=st.integers(2, 8),
     blk=st.sampled_from([8, 16]), seed=st.integers(0, 2**31 - 1),
 )
 @settings(max_examples=15, deadline=None)
-def test_block_scatter_update_property(r_t, nb, blk, seed):
-    from repro.kernels.scatter_blocks import block_scatter_update_kernel
+def test_block_scatter_update_property(k_steps, s, r_t, nb, blk, seed):
     rng = np.random.default_rng(seed)
     r = 16 * r_t
-    w = jnp.asarray(rng.normal(size=(r, nb * blk)), jnp.float32)
+    n = s * nb * blk
+    w = jnp.asarray(rng.normal(size=(k_steps, r, n)), jnp.float32)
     n_sel = int(rng.integers(1, nb + 1))
-    idx = jnp.asarray(rng.choice(nb, n_sel, replace=False), jnp.int32)
-    upd = jnp.asarray(rng.normal(size=(r, n_sel, blk)), jnp.float32)
+    idx = _sel_idx(rng, (k_steps, s), nb, n_sel)
+    upd = jnp.asarray(rng.normal(size=(k_steps, r, s, n_sel, blk)),
+                      jnp.float32)
     out = block_scatter_update_kernel(w, upd, idx, tr=16, interpret=True)
     want = ref.block_scatter_update_ref(w, upd, idx, blk)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("kind", ["sgd", "momentum", "adamw"])
+@pytest.mark.parametrize("k_steps,n_shards,nb,n_sel", [
+    (1, 1, 4, 3),             # odd n_sel
+    (3, 2, 4, 2),
+    (1, 4, 3, 1),
+    (3, 1, 6, 5),             # odd n_sel
+])
+def test_fused_block_opt_parity(dtype, kind, k_steps, n_shards, nb, n_sel):
+    """Fused gather+rule+writeback kernel vs the un-fused oracle: SGD is
+    bitwise; momentum/AdamW allclose (fp32 state updated in the same pass,
+    deselected blocks untouched)."""
+    rng = np.random.default_rng(k_steps * 13 + n_shards * 5 + nb)
+    r, blk = 48, 8
+    n = n_shards * nb * blk
+    w = jnp.asarray(rng.normal(size=(k_steps, r, n)), dtype)
+    g = jnp.asarray(rng.normal(size=(k_steps, r, n_shards, n_sel, blk)),
+                    dtype)
+    idx = _sel_idx(rng, (k_steps, n_shards), nb, n_sel)
+    mu = nu = None
+    if kind in ("momentum", "adamw"):
+        mu = jnp.asarray(rng.normal(size=(k_steps, r, n)), jnp.float32)
+    if kind == "adamw":
+        nu = jnp.abs(jnp.asarray(rng.normal(size=(k_steps, r, n)),
+                                 jnp.float32))
+    lr, t = jnp.float32(0.05), jnp.float32(3.0)
+    hp = dict(kind=kind, momentum=0.9, beta1=0.9, beta2=0.999, eps=1e-8,
+              weight_decay=0.01)
+    got = fused_block_opt_kernel(w, g, idx, lr, t, mu, nu, tr=16,
+                                 interpret=True, **hp)
+    # jit the oracle: bitwise means compiled-vs-compiled — XLA contracts
+    # `p - lr*g` into an FMA in both, while an eager oracle rounds twice
+    # and differs by 1 ulp on ~5% of elements
+    import functools
+    want = jax.jit(functools.partial(ref.fused_block_opt_ref, **hp))(
+        w, g, idx, lr, t, mu, nu)
+    for a, b in zip(got, want):
+        assert (a is None) == (b is None)
+        if a is None:
+            continue
+        a32, b32 = np.asarray(a, np.float32), np.asarray(b, np.float32)
+        if kind == "sgd" and dtype == jnp.float32:
+            np.testing.assert_array_equal(a32, b32)
+        elif kind == "sgd":
+            # bf16 param cast may land on the adjacent value (1 ulp) when
+            # the fp32 intermediate sits on an FMA rounding boundary
+            np.testing.assert_allclose(a32, b32, rtol=1e-2, atol=1e-7)
+        else:
+            np.testing.assert_allclose(a32, b32, rtol=1e-6, atol=1e-6)
+
+
+def test_fused_block_opt_freezes_deselected():
+    """Deselected blocks — weights AND optimizer state — come back bitwise
+    untouched (the in-place aliasing writes only selected blocks)."""
+    rng = np.random.default_rng(0)
+    k_steps, r, s, nb, blk, n_sel = 2, 32, 2, 4, 8, 1
+    n = s * nb * blk
+    w = jnp.asarray(rng.normal(size=(k_steps, r, n)), jnp.float32)
+    mu = jnp.asarray(rng.normal(size=(k_steps, r, n)), jnp.float32)
+    g = jnp.asarray(rng.normal(size=(k_steps, r, s, n_sel, blk)), jnp.float32)
+    idx = _sel_idx(rng, (k_steps, s), nb, n_sel)
+    w2, mu2, _ = fused_block_opt_kernel(w, g, idx, jnp.float32(0.1),
+                                        jnp.float32(1.0), mu, kind="momentum",
+                                        momentum=0.9, tr=16, interpret=True)
+    sel_mask = np.zeros((k_steps, r, s, nb, blk), bool)
+    for kk in range(k_steps):
+        for si in range(s):
+            sel_mask[kk, :, si, np.asarray(idx)[kk, si], :] = True
+    sel_mask = sel_mask.reshape(k_steps, r, n)
+    for before, after in ((w, w2), (mu, mu2)):
+        b, a = np.asarray(before), np.asarray(after)
+        np.testing.assert_array_equal(a[~sel_mask], b[~sel_mask])
+        assert np.abs(a[sel_mask] - b[sel_mask]).max() > 0
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -125,6 +223,22 @@ def test_kernel_integrates_with_smm_grad():
         g_kern = jax.grad(lambda w: (smm(x, w, sel, "w") ** 2).sum())(w)
     np.testing.assert_allclose(np.asarray(g_kern), np.asarray(g_jnp),
                                rtol=1e-4, atol=1e-4)
+
+
+def test_compact_dw_full_selection_view_path():
+    """The jnp fallback's full-selection branch (einsum on a reshaped view,
+    reorder on the output) matches the gather-first path exactly."""
+    from repro.core.sparse_update import SelSpec, _gather_blocks, compact_dw
+    rng = np.random.default_rng(4)
+    m, k, s, nb, blk = 64, 32, 2, 4, 8
+    spec = SelSpec(block=blk, n_shards=s, n_sel=nb, n_blocks=nb)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    dy = jnp.asarray(rng.normal(size=(m, s * nb * blk)), jnp.float32)
+    idx = _sel_idx(rng, (s,), nb, nb)        # full selection, permuted order
+    got = compact_dw(x, dy, idx, spec)
+    want = jnp.einsum("mk,msnb->ksnb", x, _gather_blocks(dy, idx, spec),
+                      preferred_element_type=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
 def test_ops_block_act_prune_nd():
