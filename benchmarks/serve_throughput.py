@@ -1,14 +1,21 @@
-"""Serving throughput benchmark: honest tok/s + per-request latency.
+"""Serving throughput benchmark: honest tok/s + latency + page-pool stats.
 
     PYTHONPATH=src python benchmarks/serve_throughput.py \
         --arch llama3-8b --smoke --requests 7 --batch 4
 
-Counts come straight from the continuous-batching engine's active-slot
-accounting: `requests_completed` counts finished requests only and
-`tokens_out` counts tokens sampled on active slots only — padded/free
-slots never inflate either number (requests=7, batch=4 reports exactly
-7 requests and 7 * gen_len tokens). `--arch all` sweeps the four cache
-families (dense KV, ring-buffer, rwkv state, mamba/hybrid state).
+Counts come straight from the paged engine's accounting: completed
+requests and their tokens only — padded/free slots never inflate either
+number, and neither do cancelled or timed-out requests (`--cancel-frac`
+cancels a fraction of requests mid-stream to prove it: requests=7,
+batch=4, cancel-frac 0 reports exactly 7 requests and 7 * gen_len
+tokens). Alongside tok/s and p50/p95 latency the benchmark reports
+page-pool utilization (peak pages / pool pages) and the prompt-prefix
+hit rate; `--shared-prefix-len N` runs the system-prompt workload where
+sharing shows up as hit rate > 0 and a LOWER page peak than
+`--no-prefix-sharing` on the same workload.
+
+`--arch all` sweeps the four cache families (dense KV, ring-buffer, rwkv
+state, hybrid mamba state).
 
 Warmup: one throwaway run triggers compilation so the timed run measures
 steady-state serving, not XLA.
@@ -18,32 +25,61 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.launch.serve import add_serve_args, build_engine
-from repro.serve.engine import make_random_requests
+from repro.launch.serve import add_serve_args, build_engine, build_requests
 
 FAMILY_ARCHS = ("llama3-8b", "gemma3-4b", "rwkv6-3b", "jamba-1.5-large-398b")
+
+
+def _attach_cancels(requests, frac: float, gen_len: int):
+    """Give the first `frac` fraction of requests a streaming callback that
+    cancels after gen_len // 2 tokens — their tokens must never reach the
+    throughput counters."""
+    n_cancel = int(len(requests) * frac)
+    cut = max(1, gen_len // 2)
+    for req in requests[:n_cancel]:
+        seen = {"n": 0}
+
+        def stop(rid, tok, seen=seen):
+            seen["n"] += 1
+            return seen["n"] < cut
+        req.stream = stop
+    return n_cancel
 
 
 def bench_one(args, arch: str):
     ns = argparse.Namespace(**{**vars(args), "arch": arch})
     cfg, engine = build_engine(ns)
-    # warmup: compile prefill/decode/insert outside the timed run
-    engine.run(make_random_requests(cfg, min(2, args.requests),
-                                    args.prompt_len, args.gen_len, seed=1))
-    requests = make_random_requests(cfg, args.requests, args.prompt_len,
-                                    args.gen_len, seed=args.seed)
+    # warmup: compile the step shapes outside the timed run
+    warm = argparse.Namespace(**{**vars(ns), "requests": min(2, ns.requests),
+                                 "seed": ns.seed + 1})
+    engine.run(build_requests(warm, cfg))
+    requests = build_requests(ns, cfg)
+    n_cancel = _attach_cancels(requests, args.cancel_frac, args.gen_len)
     stats = engine.run(requests)
+    assert stats.requests_completed == len(requests) - n_cancel, (
+        "cancelled requests leaked into completed-request accounting")
     print(f"[{arch}] requests_completed={stats.requests_completed} "
+          f"requests_cancelled={stats.requests_cancelled} "
           f"tokens_out={stats.tokens_out} "
+          f"tokens_cancelled={stats.tokens_cancelled} "
           f"tok_s={stats.tok_per_s:.1f} "
           f"latency_p50_ms={stats.latency_p50_s * 1e3:.1f} "
           f"latency_p95_ms={stats.latency_p95_s * 1e3:.1f} "
-          f"refills={stats.refills}")
+          f"refills={stats.refills} "
+          f"prefill_chunks={stats.prefill_chunks}")
+    print(f"[{arch}] pages_peak={stats.pages_peak} "
+          f"pages_total={stats.pages_total} "
+          f"page_util={stats.page_util:.2f} "
+          f"prefix_hit_rate={stats.prefix_hit_rate:.2f} "
+          f"cow_splits={stats.cow_splits}")
     return stats
 
 
 def main(argv=None):
     ap = add_serve_args(argparse.ArgumentParser())
+    ap.add_argument("--cancel-frac", type=float, default=0.0,
+                    help="fraction of requests cancelled mid-stream via "
+                         "their streaming callback")
     args = ap.parse_args(argv)
     archs = FAMILY_ARCHS if args.arch == "all" else (args.arch,)
     return {arch: bench_one(args, arch) for arch in archs}

@@ -1,11 +1,17 @@
-"""Batched serving example: continuous batching over a request queue.
+"""Batched serving example: paged continuous batching over a request queue.
 
     PYTHONPATH=src python examples/serve_lm.py --arch llama3-8b
     PYTHONPATH=src python examples/serve_lm.py --arch rwkv6-3b   # O(1)-state decode
     PYTHONPATH=src python examples/serve_lm.py --arch gemma3-4b --temperature 0.8
+    PYTHONPATH=src python examples/serve_lm.py --arch llama3-8b --stream
+    PYTHONPATH=src python examples/serve_lm.py --arch llama3-8b --shared-prefix 16
 
-With more requests than slots, finished slots are re-prefilled from the
-queue mid-flight (watch the refill count in the summary line).
+With more requests than slots, finished slots are re-admitted from the
+queue mid-flight (watch the refill count). `--shared-prefix N` gives every
+request a common N-token prompt prefix — the prefix-hit rate and COW-split
+counters in the summary show the paged cache sharing those pages. With
+`--stream`, tokens print as they are sampled (requests interleave: that is
+continuous batching in action).
 """
 import argparse
 import sys
@@ -20,11 +26,17 @@ def main():
     ap.add_argument("--arch", default="llama3-8b")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--stream", action="store_true")
+    ap.add_argument("--shared-prefix", type=int, default=0)
     args = ap.parse_args()
-    serve_cli.main(["--arch", args.arch, "--smoke",
-                    "--requests", str(args.requests), "--batch", "4",
-                    "--prompt-len", "24", "--gen-len", "8",
-                    "--temperature", str(args.temperature)])
+    argv = ["--arch", args.arch, "--smoke",
+            "--requests", str(args.requests), "--batch", "4",
+            "--prompt-len", "24", "--gen-len", "8", "--page-size", "8",
+            "--temperature", str(args.temperature),
+            "--shared-prefix-len", str(args.shared_prefix)]
+    if args.stream:
+        argv.append("--stream")
+    serve_cli.main(argv)
 
 
 if __name__ == "__main__":

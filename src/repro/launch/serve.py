@@ -1,14 +1,16 @@
-"""Serving launcher: thin CLI over the continuous-batching engine.
+"""Serving launcher: thin CLI over the paged continuous-batching engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
-        --requests 16 --batch 4 --prompt-len 32 --gen-len 16
+        --requests 16 --batch 4 --prompt-len 32 --gen-len 16 \
+        --page-size 16 --shared-prefix-len 16 --stream
 
-Requests are admitted into fixed decode slots; a finished slot is
-re-prefilled from the queue on the next engine iteration without draining
-the batch (slot state = cache rows; see repro/serve/__init__.py for the
-slot state machine). Reported request/token counts cover ACTIVE slots only
-— padded/free slots are never counted. On CPU this serves the smoke
-configs; the same engine lowers to the production mesh for the full
+Requests are admitted into fixed decode slots backed by a paged KV cache:
+prompts chunk-prefill a page at a time (long admissions never stall
+in-flight decodes), common prompt prefixes share refcounted pages
+copy-on-write, and `--stream` prints tokens as they are sampled. Reported
+request/token counts cover COMPLETED requests only — padded slots and
+cancelled/timed-out requests are never counted. On CPU this serves the
+smoke configs; the same engine lowers to the production mesh for the full
 configs (see launch/dryrun.py decode cells).
 """
 from __future__ import annotations
@@ -20,7 +22,8 @@ import jax
 from repro.configs import get_config, get_smoke_config
 from repro.models import transformer as T
 from repro.serve import ServeEngine
-from repro.serve.engine import make_random_requests
+from repro.serve.engine import (make_random_requests,
+                                make_shared_prefix_requests)
 
 
 def build_engine(args, cfg=None):
@@ -30,8 +33,26 @@ def build_engine(args, cfg=None):
     engine = ServeEngine(
         cfg, params, num_slots=args.batch,
         max_len=args.prompt_len + args.gen_len,
-        temperature=args.temperature, eos_id=args.eos_id, seed=args.seed)
+        temperature=args.temperature, eos_id=args.eos_id, seed=args.seed,
+        page_size=args.page_size, num_pages=args.num_pages,
+        prefix_sharing=not args.no_prefix_sharing)
     return cfg, engine
+
+
+def build_requests(args, cfg):
+    if args.shared_prefix_len > 0:
+        reqs = make_shared_prefix_requests(
+            cfg, args.requests, args.shared_prefix_len, args.prompt_len,
+            args.gen_len, seed=args.seed)
+    else:
+        reqs = make_random_requests(cfg, args.requests, args.prompt_len,
+                                    args.gen_len, seed=args.seed)
+    for r in reqs:
+        r.timeout_s = args.timeout_s
+        if args.stream:
+            r.stream = lambda rid, tok: print(
+                f"[stream] rid={rid} token={tok}")
+    return reqs
 
 
 def add_serve_args(ap: argparse.ArgumentParser):
@@ -44,21 +65,39 @@ def add_serve_args(ap: argparse.ArgumentParser):
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--eos-id", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV-cache page")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="page-pool capacity (default: batch * max pages "
+                         "per request, i.e. contiguous-equivalent)")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="disable cross-request prompt-prefix page sharing")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="> 0: requests share a common prompt prefix of "
+                         "this many tokens (system-prompt workload)")
+    ap.add_argument("--timeout-s", type=float, default=None,
+                    help="per-request wall-clock deadline")
+    ap.add_argument("--stream", action="store_true",
+                    help="print tokens as they are sampled")
     return ap
 
 
 def main(argv=None):
     args = add_serve_args(argparse.ArgumentParser()).parse_args(argv)
     cfg, engine = build_engine(args)
-    requests = make_random_requests(cfg, args.requests, args.prompt_len,
-                                    args.gen_len, seed=args.seed)
-    stats = engine.run(requests, verbose=True)
-    print(f"[serve] {stats.requests_completed}/{args.requests} requests, "
+    stats = engine.run(build_requests(args, cfg), verbose=not args.stream)
+    print(f"[serve] {stats.requests_completed}/{args.requests} requests "
+          f"({stats.requests_cancelled} cancelled), "
           f"{stats.tokens_out} tokens in {stats.wall_s:.2f}s "
           f"({stats.tok_per_s:.1f} tok/s incl. compile, "
-          f"{stats.refills} slot refills)")
+          f"{stats.refills} slot refills, "
+          f"{stats.prefill_chunks} prefill chunks)")
     print(f"[serve] latency p50 {stats.latency_p50_s * 1e3:.1f}ms "
           f"p95 {stats.latency_p95_s * 1e3:.1f}ms")
+    print(f"[serve] pages {stats.pages_peak}/{stats.pages_total} peak "
+          f"(util {stats.page_util:.2f}), "
+          f"prefix hit rate {stats.prefix_hit_rate:.2f}, "
+          f"{stats.cow_splits} COW splits")
     return stats
 
 

@@ -116,6 +116,228 @@ def cache_reset_row(cache, row):
 
 
 # ---------------------------------------------------------------------------
+# paged serving caches
+#
+# The serve engine splits per-layer caches into two trees:
+#
+# - `state`: per-slot leaves, shaped [scan_steps, B, ...] — ring-buffer k/v
+#   for sliding-window layers and O(1) recurrent state for ssm/rwkv layers
+#   (a state family is effectively a single resident "page" per slot). The
+#   row ops above (insert/extract/reset) apply unchanged.
+# - `pools`: physical token-row pools for window-free attention layers,
+#   shaped [scan_steps, num_pages * page_size, Hkv, D] and shared by ALL
+#   slots; a per-slot page table maps logical page -> physical page in every
+#   layer's pool simultaneously (one page id indexes all layers).
+#
+# `paged_step` consumes both trees for s >= 1 tokens per row, so the same
+# jitted function serves batched decode (B=num_slots, S=1) and chunked
+# prefill (B=1, S=page-sized chunk).
+# ---------------------------------------------------------------------------
+
+def _paged_layout(cfg, kind: str):
+    """(sub_name | None, 'paged'|'ring'|'state') for each sublayer mixer."""
+    if kind in ("dense", "moe"):
+        window = T._window_for(cfg, kind, 0) if kind == "dense" else 0
+        return [(None, "ring" if window > 0 else "paged")]
+    if kind == "gemma_super":
+        _, l, g = cfg.attn_pattern.split(":")
+        out = []
+        for i in range(int(l) + int(g)):
+            window = T._window_for(cfg, "gemma_super", i)
+            out.append((f"sub{i}", "ring" if window > 0 else "paged"))
+        return out
+    if kind == "jamba_super":
+        attn_pos = cfg.attn_every // 2
+        return [(f"sub{i}", "paged" if i == attn_pos else "state")
+                for i in range(cfg.attn_every)]
+    if kind == "rwkv":
+        return [(None, "state")]
+    raise ValueError(kind)
+
+
+def has_paged_layers(cfg) -> bool:
+    return any(role == "paged"
+               for seg in T.segment_layout(cfg)
+               for _, role in _paged_layout(cfg, seg.kind))
+
+
+def supports_prefix_sharing(cfg) -> bool:
+    """Prompt-prefix K/V reuse skips prefill compute, which is only sound
+    when EVERY layer's cache is position-addressed (paged): ring and
+    recurrent state at the resume point is not reconstructable from pages."""
+    return (not cfg.embed_inputs) and all(
+        role == "paged"
+        for seg in T.segment_layout(cfg)
+        for _, role in _paged_layout(cfg, seg.kind))
+
+
+def _serve_leaf(cfg, role: str, batch: int, max_len: int, kind: str,
+                sub: int, pool_rows: int):
+    dt = _cache_dtype(cfg)
+    if role == "ring":
+        hd = cfg.resolved_head_dim
+        window = T._window_for(cfg, kind, sub)
+        size = min(window, max_len)
+        state = {"k": jnp.zeros((batch, size, cfg.num_kv_heads, hd), dt),
+                 "v": jnp.zeros((batch, size, cfg.num_kv_heads, hd), dt)}
+        return state, {}
+    if role == "paged":
+        hd = cfg.resolved_head_dim
+        pool = {"k": jnp.zeros((pool_rows, cfg.num_kv_heads, hd), dt),
+                "v": jnp.zeros((pool_rows, cfg.num_kv_heads, hd), dt)}
+        return {}, pool
+    if kind == "rwkv":
+        return R.init_rwkv_cache(cfg, batch, dt), {}
+    return M.init_mamba_cache(cfg, batch, dt), {}
+
+
+def init_serve_cache(cfg, batch: int, max_len: int, num_pages: int,
+                     page_size: int):
+    """Returns (state, pools): per-slot state tree + shared page pools."""
+    pool_rows = num_pages * page_size
+    state, pools = {}, {}
+    for seg in T.segment_layout(cfg):
+        st_one, pl_one = {}, {}
+        for i, (sub, role) in enumerate(_paged_layout(cfg, seg.kind)):
+            s, p = _serve_leaf(cfg, role, batch, max_len, seg.kind, i,
+                               pool_rows)
+            if sub is None:
+                st_one, pl_one = s, p
+            else:           # keep tree structures minimal: no empty subdicts
+                if s:
+                    st_one[sub] = s
+                if p:
+                    pl_one[sub] = p
+        stack = lambda one: jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (seg.steps,) + a.shape), one)
+        state[seg.name] = stack(st_one)
+        pools[seg.name] = stack(pl_one)
+    return state, pools
+
+
+def copy_pool_rows(pools, src_row, dst_row, n: int):
+    """Copy `n` physical token rows src -> dst in EVERY layer's pool (the
+    device half of a COW split or prefix-page duplication)."""
+    def cp(a):
+        rows = jax.lax.dynamic_slice_in_dim(a, src_row, n, axis=1)
+        return jax.lax.dynamic_update_slice_in_dim(a, rows, dst_row, axis=1)
+    return jax.tree.map(cp, pools)
+
+
+def _paged_block(cfg, kind: str, p, x, start, active, st_c, pl_c, page_table,
+                 page_size: int):
+    """One scan step of `paged_step`; mirrors `_decode_block` for s >= 1."""
+    def attn(sub_p, h, role, window, st, pl):
+        if role == "ring":
+            return L.chunk_ring_attention(sub_p, cfg, h, start, active, st,
+                                          window=window)
+        a, pool = L.chunk_paged_attention(sub_p, cfg, h, start, active, pl,
+                                          page_table, page_size=page_size)
+        return a, pool
+
+    if kind in ("dense", "moe"):
+        window = T._window_for(cfg, kind, 0) if kind == "dense" else 0
+        role = "ring" if window > 0 else "paged"
+        h = L.apply_norm(p["attn_ln"], x)
+        a, c_out = attn(p["attn"], h, role, window, st_c, pl_c)
+        x = x + a
+        h = L.apply_norm(p["mlp_ln"], x)
+        if kind == "moe":
+            y, _ = MOE.apply_moe(p["moe"], cfg, h)
+        else:
+            y = L.apply_mlp(p["mlp"], cfg, h)
+        x = x + y
+        return (x, c_out, {}) if role == "ring" else (x, {}, c_out)
+    if kind == "gemma_super":
+        new_st, new_pl = {}, {}
+        for i, (sub, role) in enumerate(_paged_layout(cfg, kind)):
+            sp = p[sub]
+            window = T._window_for(cfg, kind, i)
+            h = L.apply_norm(sp["attn_ln"], x)
+            a, c_out = attn(sp["attn"], h, role, window,
+                            st_c.get(sub), pl_c.get(sub))
+            if role == "ring":
+                new_st[sub] = c_out
+            else:
+                new_pl[sub] = c_out
+            x = x + a
+            h = L.apply_norm(sp["mlp_ln"], x)
+            x = x + L.apply_mlp(sp["mlp"], cfg, h)
+        return x, new_st, new_pl
+    if kind == "jamba_super":
+        attn_pos = cfg.attn_every // 2
+        new_st, new_pl = {}, {}
+        for i in range(cfg.attn_every):
+            sub = f"sub{i}"
+            sp = p[sub]
+            h = L.apply_norm(sp["mixer_ln"], x)
+            if i == attn_pos:
+                a, new_pl[sub] = attn(sp["attn"], h, "paged", 0, None,
+                                      pl_c[sub])
+                x = x + a
+            else:
+                y, new_st[sub] = M.apply_mamba(sp["mamba"], cfg, h,
+                                               cache=st_c[sub])
+                x = x + y
+            h = L.apply_norm(sp["ffn_ln"], x)
+            if T._moe_at(cfg, i):
+                y, _ = MOE.apply_moe(sp["moe"], cfg, h)
+            else:
+                y = L.apply_mlp(sp["mlp"], cfg, h)
+            x = x + y
+        return x, new_st, new_pl
+    if kind == "rwkv":
+        h = L.apply_norm(p["time_ln"], x)
+        y, tc = R.apply_time_mix(p["time"], cfg, h, cache=st_c["time"])
+        x = x + y
+        h = L.apply_norm(p["chan_ln"], x)
+        y, cc = R.apply_channel_mix(p["chan"], cfg, h, cache=st_c["chan"])
+        return x + y, {"time": tc, "chan": cc}, {}
+    raise ValueError(kind)
+
+
+def paged_step(cfg, params, batch, state, pools, page_table, *,
+               page_size: int):
+    """s >= 1 tokens per batch row against the paged serve caches.
+
+    batch: {"tokens" [B,S] | "embeds" [B,S,d], "start" [B], "active" [B]}.
+    `start` is the per-row token count already cached (the chunk occupies
+    positions start..start+S); rows with active=False keep ALL their state
+    (per-row leaves are row-selected here, pool writes are dropped inside
+    the attention). Returns (last-position logits [B, V], state, pools).
+    """
+    start = batch["start"]
+    active = batch["active"]
+    pair = (params, None)
+    x = T.embed_tokens(cfg, pair, batch)
+
+    def merge(new, old):
+        return jax.tree.map(
+            lambda n, o: jnp.where(
+                active.reshape((-1,) + (1,) * (n.ndim - 1)), n, o), new, old)
+
+    new_state, new_pools = {}, {}
+    for seg in T.segment_layout(cfg):
+        stack = params["segments"][seg.name]
+
+        def body(x, xs):
+            p_l, st_l, pl_l = xs
+            x = constrain(x, "batch", "seq", "model_d")
+            x, st_out, pl_out = _paged_block(
+                cfg, seg.kind, p_l, x, start, active, st_l, pl_l,
+                page_table, page_size)
+            return x, (merge(st_out, st_l), pl_out)
+
+        x, (new_state[seg.name], new_pools[seg.name]) = jax.lax.scan(
+            body, x, (stack, state[seg.name], pools[seg.name]))
+    x = L.apply_norm(T._pick(params, None, "final_norm"), x)
+    w_head = T.lm_head_weight(cfg, pair)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], w_head,
+                        preferred_element_type=jnp.float32)
+    return logits, new_state, new_pools
+
+
+# ---------------------------------------------------------------------------
 # decode step
 # ---------------------------------------------------------------------------
 

@@ -356,6 +356,132 @@ def decode_attention(p, cfg, x, positions, cache, *, window: int = 0):
     return smm(out, p["wo"], None, "wo"), new_cache
 
 
+# ---------------------------------------------------------------------------
+# Chunk-capable serving attention (paged + ring)
+#
+# Both variants process s >= 1 new tokens per call against an existing cache,
+# so the serving engine's single step function covers batched decode (s=1
+# over all slots) AND chunked prefill (one slot, page-sized chunks) — long
+# admissions never stall in-flight decodes behind a monolithic prefill.
+# Scores are taken against [cached keys ++ in-chunk keys] with the cache
+# read BEFORE the chunk's rows are written, so in-chunk causality never
+# depends on write ordering (a ring buffer may overwrite its own chunk).
+# ---------------------------------------------------------------------------
+
+def _grouped_scores(q, k_cat, v_cat, mask, cfg):
+    """q: [B,S,Hq,D]; k_cat/v_cat: [B,L,Hkv,D]; mask: [B,S,L] -> [B,S,Hq*D]."""
+    b, s, hq, hd = q.shape
+    hkv = cfg.num_kv_heads
+    g = hq // hkv
+    qg = q.reshape(b, s, hkv, g, hd)
+    scores = jnp.einsum("bshgd,blhd->bhgsl", qg, k_cat,
+                        preferred_element_type=jnp.float32) / math.sqrt(hd)
+    scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgsl,blhd->bshgd", probs.astype(q.dtype), v_cat,
+                     preferred_element_type=jnp.float32).astype(q.dtype)
+    return out.reshape(b, s, hq * hd)
+
+
+def _serve_positions(cfg, start, s):
+    """Token positions for a chunk: [B,S] (or [3,B,S] broadcast for mrope)."""
+    pos = start[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+    if getattr(cfg, "mrope", False):
+        pos = jnp.broadcast_to(pos, (3,) + pos.shape)
+    return pos
+
+
+def chunk_ring_attention(p, cfg, x, start, active, cache, *, window: int):
+    """Sliding-window attention for a chunk of s tokens per batch row.
+
+    cache: {"k","v": [B, W, H, D]} ring buffers (position p at slot p % W).
+    `start` [B] = tokens already cached per row; rows with active=False get
+    their cache returned unchanged (the caller row-selects, but the write
+    here must still be computed — shapes are fixed).
+    """
+    b, s, _ = x.shape
+    w_cap = cache["k"].shape[1]
+    q, k, v = _qkv(p, cfg, x, _serve_positions(cfg, start, s))
+
+    j = jnp.arange(s)
+    qpos = start[:, None] + j[None, :]                       # [B, S]
+    # ring part: slot i holds the latest position == i (mod W) that is
+    # <= start-1 (pre-chunk content); negative p_at -> never written
+    idx = jnp.arange(w_cap)[None, :]
+    last = start[:, None] - 1
+    p_at = last - jnp.mod(last - idx, w_cap)                 # [B, W]
+    ring_mask = (p_at[:, None, :] >= 0) & \
+        (qpos[:, :, None] - p_at[:, None, :] < window)       # [B, S, W]
+    # in-chunk part: causal within the chunk, window-limited
+    chunk_mask = (j[None, :] <= j[:, None]) & (j[:, None] - j[None, :] < window)
+    chunk_mask = jnp.broadcast_to(chunk_mask[None], (b, s, s))
+
+    k_cat = jnp.concatenate([cache["k"].astype(k.dtype), k], axis=1)
+    v_cat = jnp.concatenate([cache["v"].astype(v.dtype), v], axis=1)
+    mask = jnp.concatenate([ring_mask, chunk_mask], axis=2)
+    out = _grouped_scores(q, k_cat, v_cat, mask, cfg)
+
+    # write the chunk into the ring: position p -> slot p % W; when s > W
+    # only the last W chunk rows survive, so earlier rows are dropped via an
+    # out-of-bounds slot (duplicate in-bounds scatters have no defined order)
+    slot = jnp.where((j[None, :] >= s - w_cap) & active[:, None],
+                     jnp.mod(qpos, w_cap), w_cap)            # [B, S]
+    rows = jnp.broadcast_to(jnp.arange(b)[:, None], (b, s))
+    k_cache = cache["k"].at[rows, slot].set(
+        k.astype(cache["k"].dtype), mode="drop")
+    v_cache = cache["v"].at[rows, slot].set(
+        v.astype(cache["v"].dtype), mode="drop")
+    return smm(out, p["wo"], None, "wo"), {"k": k_cache, "v": v_cache}
+
+
+def chunk_paged_attention(p, cfg, x, start, active, pool, page_table, *,
+                          page_size: int):
+    """Full (window-free) attention for a chunk of s tokens per batch row,
+    reading and writing K/V through per-row page tables.
+
+    pool: {"k","v": [R, H, D]} physical token rows shared by ALL batch rows
+    (R = num_pages * page_size); page_table: [B, MP] int32 physical page per
+    logical page, -1 where unallocated. Writes of inactive rows (and rows
+    whose page is unallocated) are dropped via out-of-bounds indices.
+    """
+    b, s, _ = x.shape
+    ps = page_size
+    r_rows = pool["k"].shape[0]
+    mp = page_table.shape[1]
+    q, k, v = _qkv(p, cfg, x, _serve_positions(cfg, start, s))
+
+    # gather the cached prefix in logical order: [B, MP*ps] physical rows
+    phys = jnp.clip(page_table, 0)[:, :, None] * ps + \
+        jnp.arange(ps)[None, None, :]
+    phys = phys.reshape(b, mp * ps)
+    k_cache = jnp.take(pool["k"], phys, axis=0)              # [B, L, H, D]
+    v_cache = jnp.take(pool["v"], phys, axis=0)
+
+    l_idx = jnp.arange(mp * ps)[None, :]                     # logical index
+    alloc = jnp.take_along_axis(page_table, l_idx // ps, axis=1) >= 0
+    cache_mask = (l_idx < start[:, None]) & alloc            # [B, L]
+    cache_mask = jnp.broadcast_to(cache_mask[:, None, :], (b, s, mp * ps))
+    j = jnp.arange(s)
+    chunk_mask = jnp.broadcast_to((j[None, :] <= j[:, None])[None], (b, s, s))
+
+    k_cat = jnp.concatenate([k_cache.astype(k.dtype), k], axis=1)
+    v_cat = jnp.concatenate([v_cache.astype(v.dtype), v], axis=1)
+    mask = jnp.concatenate([cache_mask, chunk_mask], axis=2)
+    out = _grouped_scores(q, k_cat, v_cat, mask, cfg)
+
+    # write the chunk rows: logical position -> page_table page; unallocated
+    # pages / inactive rows land out of bounds and are dropped
+    wpos = start[:, None] + j[None, :]                       # [B, S]
+    pid = jnp.take_along_axis(page_table, wpos // ps, axis=1)
+    dest = jnp.where((pid >= 0) & active[:, None],
+                     pid * ps + wpos % ps, r_rows).reshape(-1)
+    k_pool = pool["k"].at[dest].set(
+        k.reshape(b * s, *k.shape[2:]).astype(pool["k"].dtype), mode="drop")
+    v_pool = pool["v"].at[dest].set(
+        v.reshape(b * s, *v.shape[2:]).astype(pool["v"].dtype), mode="drop")
+    return smm(out, p["wo"], None, "wo"), {"k": k_pool, "v": v_pool}
+
+
 def init_kv_cache(cfg, batch: int, seq_len: int, *, window: int = 0, dtype=None):
     hd = cfg.resolved_head_dim
     size = min(window, seq_len) if window > 0 else seq_len

@@ -118,13 +118,20 @@ def apply_mamba(p, cfg, x, sel=None, cache=None):
     if cache is None:
         x_c = jax.nn.silu(_causal_depthwise_conv(x_in, p["conv_w"], p["conv_b"]))
         new_conv = None
-    else:
+    elif s == 1:
         hist = jnp.concatenate([cache["conv"], x_in], axis=1)  # [B, K-1+1, D]
         w = p["conv_w"]
         acc = jnp.einsum("bkd,kd->bd", hist.astype(jnp.float32),
                          w.astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
         x_c = jax.nn.silu(acc)[:, None, :].astype(x.dtype)
         new_conv = hist[:, 1:]
+    else:
+        # chunked prefill: conv over [history ++ chunk], keeping the chunk's
+        # outputs (each has its full K-1 causal history) and the new tail
+        hist = jnp.concatenate([cache["conv"], x_in], axis=1)  # [B, K-1+S, D]
+        full = _causal_depthwise_conv(hist, p["conv_w"], p["conv_b"])
+        x_c = jax.nn.silu(full[:, cache["conv"].shape[1]:])
+        new_conv = hist[:, -cache["conv"].shape[1]:]
 
     dbl = smm(x_c, p["x_proj"], sel, "x_proj")
     dt, b_ssm, c_ssm = jnp.split(dbl, [dr, dr + ns], axis=-1)
@@ -136,12 +143,12 @@ def apply_mamba(p, cfg, x, sel=None, cache=None):
     c32 = c_ssm.astype(jnp.float32)
 
     h0 = cache["h"] if cache is not None else jnp.zeros((b, di, ns), jnp.float32)
-    if cache is None:
-        y, h_last = selective_scan(a, dt, xc32, b32, c32, h0)
-    else:
+    if cache is not None and s == 1:
         dA, dBx = _discretize(a, dt[:, 0], xc32[:, 0], b32[:, 0])
         h_last = dA * h0 + dBx
         y = jnp.einsum("bdn,bn->bd", h_last, c32[:, 0])[:, None]
+    else:
+        y, h_last = selective_scan(a, dt, xc32, b32, c32, h0)
 
     y = y + p["D"] * x_c.astype(jnp.float32)
     y = (y.astype(x.dtype)) * jax.nn.silu(z)

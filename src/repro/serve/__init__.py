@@ -1,33 +1,61 @@
-"""Continuous-batching serving subsystem: scheduler + engine + sampling.
+"""Paged continuous-batching serving subsystem: paging + scheduler + engine.
 
-The engine owns a fixed number of decode *slots* (batch rows of the stacked
-per-layer caches from ``models/decoding.py``). Each slot runs the state
-machine::
+Cache layout (the paper's fixed-block memory discipline, applied to decode)
+---------------------------------------------------------------------------
+The engine owns a fixed number of decode *slots* and a fixed page pool.
+Per-layer caches split into two trees (``models/decoding.py``):
 
-    FREE --admit--> ACTIVE --finish--> FREE
-          (batch=1 prefill of the next   (max_new_tokens reached, or the
-           queued request, spliced into   sampled token == eos_id; the row
-           the batch cache row via        is left dirty and fully
-           cache_insert_row)              overwritten on the next admit)
+- **state** — per-slot leaves ``[scan_steps, num_slots, ...]``: ring-buffer
+  k/v for sliding-window layers, recurrent state for mamba/rwkv layers. A
+  state family is O(1) per slot — effectively a single resident "page" —
+  so it keeps its contiguous layout behind the same admission path.
+- **pools** — for every window-free attention layer, a physical token-row
+  pool ``[scan_steps, num_pages * page_size, Hkv, D]`` shared by ALL slots.
+  A per-slot page table (``[num_slots, ceil(max_len/page_size)]`` int32,
+  -1 = unallocated) maps logical page i -> physical page, and ONE page id
+  indexes every layer's pool simultaneously (vLLM-style). Attention reads
+  gather rows through the page table; writes scatter through it, so a slot
+  reserves pages as it grows instead of ``max_len`` contiguous rows.
 
-Admission is per-slot: a finished slot is re-prefilled from the queue on the
-very next engine iteration while the other slots keep decoding — the batch is
-never drained. Each engine iteration is (1) refill every FREE slot while the
-queue is non-empty, then (2) one jitted fixed-shape ``decode_step`` over all
-slots with per-slot positions. FREE slots still flow through the batched
-decode (fixed shapes), but an active-slot mask keeps their tokens out of
-sampling results and out of every throughput/latency counter — padded slots
-are never counted as requests or tokens.
+Pages are refcounted (``paging.PagePool``): a live request holds one
+reference per table entry, the prefix cache one per registered entry, and
+any write into a page with refcount > 1 first COW-splits it. Prompt-prefix
+sharing keys whole prompt-token pages by rolling crc32 chain hash (plus at
+most one partial continuation per chain) and is enabled only for fully-
+paged archs — ring/recurrent state at a resume point cannot be
+reconstructed from pages.
 
-Request/token accounting is therefore correct by construction:
-``requests_completed`` counts FINISH transitions and ``tokens_out`` counts
-sampled tokens on ACTIVE slots only.
+Slot life cycle::
+
+    FREE --admit--> PREFILL --last chunk--> ACTIVE --finish/cancel--> FREE
+          (attach shared prefix   (first token     (completed: tokens are
+           pages, then chunked     sampled from     credited; cancelled:
+           prefill, one page-      the final        they are not; pages
+           sized chunk per         chunk's logits)  decref'd either way)
+           engine iteration)
+
+Admission is per-slot and page-gated: a finished slot is re-admitted from
+the queue on the very next iteration while other slots keep decoding, and
+a request is only admitted when the pool can cover its worst-case page
+need (so mid-flight allocation never deadlocks). Chunked prefill and
+batched decode are the SAME jitted ``paged_step``; inactive batch rows
+keep their state bit-for-bit and their page writes are dropped, so padded
+slots never corrupt caches — and never count as requests or tokens.
+
+Accounting: ``requests_completed``/``tokens_out`` count FINISH transitions
+only. Streaming callbacks (``Request.stream``) see every token in order
+and may cancel mid-stream; cancelled and timed-out requests land in
+``requests_cancelled``/``tokens_cancelled`` and never inflate throughput.
 """
-from repro.serve.engine import RequestResult, ServeEngine, ServeStats
+from repro.serve.engine import (RequestResult, ServeEngine, ServeStats,
+                                make_random_requests,
+                                make_shared_prefix_requests)
+from repro.serve.paging import PagePool, PrefixCache
 from repro.serve.sampling import sample_token
 from repro.serve.scheduler import Request, Scheduler, Slot, SlotState
 
 __all__ = [
-    "Request", "RequestResult", "Scheduler", "ServeEngine", "ServeStats",
-    "Slot", "SlotState", "sample_token",
+    "PagePool", "PrefixCache", "Request", "RequestResult", "Scheduler",
+    "ServeEngine", "ServeStats", "Slot", "SlotState", "sample_token",
+    "make_random_requests", "make_shared_prefix_requests",
 ]

@@ -1,19 +1,32 @@
-"""Continuous-batching engine: fixed decode slots over the stacked caches.
+"""Continuous-batching engine over a paged KV cache.
 
 One engine iteration:
 
-1. *Refill*: while a FREE slot and a queued request exist, run a batch=1
-   prefill of the request (jitted, padded to ``max_len``), sample its first
-   token, and splice the resulting cache row into the live batch cache with
-   ``decoding.cache_insert_row`` — the other slots are untouched and the
-   batch is never drained.
-2. *Decode*: one jitted fixed-shape ``decoding.decode_step`` over all slots
-   with per-slot positions, then one sampling call. Tokens landing on FREE
-   slots are discarded; only ACTIVE slots are recorded/accounted.
+1. *Timeouts*: requests past their deadline are cancelled (queued ones are
+   dropped without admission); their tokens never reach the throughput
+   counters.
+2. *Admission*: while a FREE slot and a queued request exist AND the page
+   pool can cover the request's worst-case page need, bind the request to
+   the slot. Prompt-prefix sharing (fully-paged archs only) attaches cached
+   pages — chain-hashed whole prompt pages plus at most one partial
+   continuation — so the matched prefix tokens are never recomputed.
+3. *Chunked prefill*: every PREFILL slot advances by ONE page-sized chunk
+   through the same ``paged_step`` the decode uses (B=1), so a long prompt
+   admission never stalls in-flight decodes. The final chunk's logits yield
+   the request's first sampled token.
+4. *Decode*: one jitted fixed-shape ``paged_step`` over all slots (S=1)
+   with per-slot start positions and an active mask; inactive rows keep
+   their state bit-for-bit and their page writes are dropped.
+
+Copy-on-write: any write into a page shared with the prefix cache or
+another request first COW-splits it (exclusive copy of the device rows in
+every layer's pool). The canonical trigger: a request registers its
+partially-filled last prompt page, then COWs it on its first decode write,
+leaving the cached page frozen at prompt-only content.
 
 PRNG: the engine key is split every step, so temperature sampling and the
-placeholder-embeds input path (``cfg.embed_inputs`` frontends) never reuse a
-key across steps.
+placeholder-embeds input path (``cfg.embed_inputs`` frontends) never reuse
+a key across steps.
 """
 from __future__ import annotations
 
@@ -26,11 +39,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import decoding as D
+from repro.serve.paging import PagePool, PrefixCache
 from repro.serve.sampling import sample_token
-from repro.serve.scheduler import Request, Scheduler
+from repro.serve.scheduler import Request, Scheduler, Slot, SlotState
 
 __all__ = ["RequestResult", "ServeEngine", "ServeStats",
-           "make_random_requests"]
+           "make_random_requests", "make_shared_prefix_requests"]
 
 
 @dataclasses.dataclass
@@ -38,41 +52,75 @@ class RequestResult:
     rid: int
     tokens: list            # sampled token ids, in order
     latency_s: float        # submit -> completion (includes queueing)
+    status: str = "completed"   # completed | cancelled
 
 
 @dataclasses.dataclass
 class ServeStats:
     requests_completed: int
-    tokens_out: int
+    requests_cancelled: int
+    tokens_out: int         # tokens of COMPLETED requests only
+    tokens_cancelled: int
     wall_s: float
     tok_per_s: float
     latency_p50_s: float
     latency_p95_s: float
     refills: int            # admissions that recycled a dirty slot
+    prefill_chunks: int     # chunked-prefill steps run
+    prefix_hit_tokens: int  # prompt tokens served from shared pages
+    prefix_lookup_tokens: int
+    pages_total: int        # page-pool capacity
+    pages_peak: int         # peak pages in use (sharing lowers this)
+    cow_splits: int
     results: dict           # rid -> RequestResult
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        return self.prefix_hit_tokens / max(1, self.prefix_lookup_tokens)
+
+    @property
+    def page_util(self) -> float:
+        return self.pages_peak / max(1, self.pages_total)
 
 
 class ServeEngine:
-    """Continuous-batching serve loop for one model + parameter set."""
+    """Paged continuous-batching serve loop for one model + parameter set."""
 
     def __init__(self, cfg, params, *, num_slots: int, max_len: int,
                  temperature: float = 0.0, eos_id: Optional[int] = None,
-                 seed: int = 0):
-        assert num_slots >= 1 and max_len >= 2
+                 seed: int = 0, page_size: int = 16,
+                 num_pages: Optional[int] = None, prefix_sharing: bool = True):
+        assert num_slots >= 1 and max_len >= 2 and page_size >= 1
         self.cfg = cfg
         self.params = params
         self.num_slots = num_slots
         self.max_len = max_len
+        self.page_size = page_size
+        self.max_pages = -(-max_len // page_size)
+        self.has_pages = D.has_paged_layers(cfg)
+        # default pool = contiguous capacity (num_slots full-length tables);
+        # prefix sharing makes the PEAK usage come in under it. State-only
+        # archs (rwkv) have no paged layers and no pool at all.
+        if not self.has_pages:
+            self.num_pages = 0
+        else:
+            self.num_pages = num_pages if num_pages is not None else \
+                num_slots * self.max_pages
+        self.prefix_sharing = prefix_sharing and D.supports_prefix_sharing(cfg)
         self.temperature = float(temperature)
         self.eos_id = eos_id
         self._key = jax.random.PRNGKey(seed)
         self._zero_key = jax.random.PRNGKey(0)
 
-        self._prefill = jax.jit(
-            lambda p, batch: D.prefill(cfg, p, batch, pad_to=max_len))
-        self._decode = jax.jit(
-            lambda p, batch, cache: D.decode_step(cfg, p, batch, cache))
+        ps = page_size
+        self._step = jax.jit(
+            lambda p, batch, state, pools, pt: D.paged_step(
+                cfg, p, batch, state, pools, pt, page_size=ps))
+        self._extract = jax.jit(D.cache_extract_row)
         self._insert = jax.jit(D.cache_insert_row)
+        self._reset = jax.jit(D.cache_reset_row)
+        self._copy = jax.jit(
+            lambda pools, src, dst: D.copy_pool_rows(pools, src, dst, ps))
         self._sample = jax.jit(
             lambda logits, key: sample_token(logits, key, self.temperature))
 
@@ -86,27 +134,21 @@ class ServeEngine:
         """Greedy sampling ignores the key — skip the per-token split."""
         return self._zero_key if self.temperature <= 0.0 else self._next_key()
 
-    def _positions(self, pos_row):
-        positions = jnp.asarray(pos_row, jnp.int32)[:, None]      # [B, 1]
-        if self.cfg.mrope:
-            positions = jnp.broadcast_to(
-                positions, (3,) + positions.shape)                # [3, B, 1]
-        return positions
-
-    def _prefill_batch(self, req: Request):
-        batch = {}
+    def _chunk_batch(self, req: Request, start: int, size: int):
+        batch = {"start": jnp.asarray([start], jnp.int32),
+                 "active": jnp.asarray([True])}
         if self.cfg.embed_inputs:
-            batch["embeds"] = jnp.asarray(req.embeds)[None]
+            batch["embeds"] = jnp.asarray(req.embeds[start:start + size])[None]
         else:
-            batch["tokens"] = jnp.asarray(req.tokens, jnp.int32)[None]
-        if self.cfg.mrope:
-            pos = jnp.arange(req.prompt_len, dtype=jnp.int32)[None]
-            batch["positions"] = jnp.broadcast_to(
-                pos, (3, 1, req.prompt_len))
+            batch["tokens"] = jnp.asarray(
+                req.tokens[start:start + size], jnp.int32)[None]
         return batch
 
-    def _decode_batch(self, tokens_row, pos_row):
-        batch = {"positions": self._positions(pos_row)}
+    def _decode_batch(self, tokens_row, pos_row, active_row=None):
+        if active_row is None:
+            active_row = [True] * self.num_slots
+        batch = {"start": jnp.asarray(pos_row, jnp.int32),
+                 "active": jnp.asarray(active_row)}
         if self.cfg.embed_inputs:
             # placeholder frontend: fresh embeds each step (fresh key per
             # step — a reused key would feed identical inputs every step)
@@ -117,6 +159,75 @@ class ServeEngine:
             batch["tokens"] = jnp.asarray(tokens_row, jnp.int32)[:, None]
         return batch
 
+    # -- page bookkeeping --------------------------------------------------
+
+    def _pages_needed(self, req: Request) -> int:
+        if not self.has_pages:
+            return 0
+        # the final sampled token is returned but never written back
+        written = req.prompt_len + req.max_new_tokens - 1
+        return -(-written // self.page_size)
+
+    def _worst_case_need(self, slot: Slot) -> int:
+        """Pages this live request may still allocate: unallocated logical
+        pages plus (at most) one COW of the shared page at its write
+        boundary. Full shared prefix pages are never written again, so they
+        never COW under the holder."""
+        need = sum(1 for pg in range(self._pages_needed(slot.request))
+                   if self._pt[slot.index, pg] < 0)
+        wp = slot.pos // self.page_size
+        if wp < self.max_pages:
+            pid = self._pt[slot.index, wp]
+            if pid >= 0 and self._pool.ref[pid] > 1:
+                need += 1
+        return need
+
+    def _headroom(self, sched) -> int:
+        avail = self._pool.free_pages
+        if self._cache is not None:
+            avail += self._cache.evictable()
+        return avail - sum(self._worst_case_need(s)
+                           for s in sched.live_slots())
+
+    def _evict_until_free(self) -> None:
+        while not self._pool.free_pages:
+            if self._cache is None or not self._cache.evict_one():
+                raise RuntimeError("page pool exhausted with nothing "
+                                   "evictable (reservation bug)")
+
+    def _alloc_page(self) -> int:
+        self._evict_until_free()
+        return self._pool.alloc()
+
+    def _ensure_writable(self, slot: Slot, lo: int, hi: int, pools):
+        """Make every page covering token positions [lo, hi) allocated and
+        exclusive to `slot`, COW-splitting shared pages (copying their
+        device rows) before any write lands in them."""
+        if not self.has_pages:
+            return pools
+        ps = self.page_size
+        for pg in range(lo // ps, -(-hi // ps)):
+            pid = int(self._pt[slot.index, pg])
+            if pid < 0:
+                pid = self._alloc_page()
+                assert pg == len(slot.page_ids), "non-contiguous page alloc"
+                slot.page_ids.append(pid)
+                self._pt[slot.index, pg] = pid
+            elif self._pool.ref[pid] > 1:
+                self._evict_until_free()
+                new = self._pool.cow_split(pid)
+                pools = self._copy(pools, pid * ps, new * ps)
+                slot.page_ids[pg] = new
+                self._pt[slot.index, pg] = new
+        return pools
+
+    def _release_slot(self, slot: Slot):
+        for pid in slot.page_ids:
+            self._pool.decref(pid)
+        slot.page_ids = []
+        slot.registered_pages = 0
+        self._pt[slot.index, :] = -1
+
     # -- serve loop --------------------------------------------------------
 
     def run(self, requests: list[Request], verbose: bool = False) -> ServeStats:
@@ -126,65 +237,181 @@ class ServeEngine:
             assert r.prompt_len + r.max_new_tokens <= self.max_len, (
                 f"request {r.rid}: prompt {r.prompt_len} + gen "
                 f"{r.max_new_tokens} exceeds max_len {self.max_len}")
+            assert self._pages_needed(r) <= self.num_pages, (
+                f"request {r.rid} needs {self._pages_needed(r)} pages; "
+                f"pool has {self.num_pages}")
         sched = Scheduler(self.num_slots, eos_id=self.eos_id)
         for r in requests:
             sched.submit(r)
 
-        cache = D.init_cache(self.cfg, self.num_slots, self.max_len)
+        state, pools = D.init_serve_cache(
+            self.cfg, self.num_slots, self.max_len,
+            max(1, self.num_pages), self.page_size)
+        self._pt = np.full((self.num_slots, self.max_pages), -1, np.int32)
+        self._pool = PagePool(max(1, self.num_pages), self.page_size)
+        self._cache = PrefixCache(self._pool) if self.prefix_sharing else None
+        prefill_chunks = 0
         results: dict[int, RequestResult] = {}
         t0 = time.perf_counter()
+        deadline = {r.rid: (t0 + r.timeout_s if r.timeout_s is not None
+                            else None) for r in requests}
 
-        def finish(slot):
+        def close(slot, status):
             results[slot.request.rid] = RequestResult(
                 slot.request.rid, list(slot.out_tokens),
-                time.perf_counter() - t0)
-            if verbose:
+                time.perf_counter() - t0, status)
+            self._release_slot(slot)
+            if verbose and status == "completed":
                 print(f"[serve] completed {sched.requests_completed}"
                       f"/{len(requests)} requests")
 
         while not sched.done:
-            # 1) refill every free slot from the queue (per-slot admission)
-            while (adm := sched.next_admission()) is not None:
+            now = time.perf_counter()
+            # 1) deadlines: cancel overdue slots, drop overdue queued requests
+            for slot in sched.live_slots():
+                dl = deadline[slot.request.rid]
+                if dl is not None and now > dl:
+                    sched.cancel(slot)
+                    close(slot, "cancelled")
+            for req in [q for q in sched.queue
+                        if deadline[q.rid] is not None
+                        and now > deadline[q.rid]]:
+                sched.drop_queued(req)
+                results[req.rid] = RequestResult(req.rid, [], 0.0, "cancelled")
+
+            # 2) admission (two-phase: page-pool pressure can defer the
+            # queue head without disturbing FIFO order)
+            while (adm := sched.peek_admission()) is not None:
                 slot, req = adm
-                logits, row_cache = self._prefill(
-                    self.params, self._prefill_batch(req))
-                cache = self._insert(cache, row_cache, slot.index)
-                first = int(self._sample(logits, self._sample_key())[0])
-                if sched.record_token(slot, first):
-                    finish(slot)
+                matched, covered = [], 0
+                if self._cache is not None and req.tokens is not None:
+                    # leave >= 1 prompt token uncached: something must
+                    # produce the logits that sample the first token
+                    matched, covered = self._cache.match(
+                        np.asarray(req.tokens), req.prompt_len - 1)
+                has_partial = bool(matched) and matched[-1][1] < self.page_size
+                need = self._pages_needed(req) - len(matched) + int(has_partial)
+                if self.has_pages and self._headroom(sched) < need:
+                    if matched:                     # roll the match back
+                        self._cache.abandon(matched, req.prompt_len)
+                        matched, covered = [], 0
+                    if sched.live_slots():
+                        break       # retry when an in-flight request frees pages
+                    # nothing in flight will ever free pages: admit WITHOUT
+                    # sharing — with no live slots every cache page is
+                    # evictable, so pages_needed <= num_pages always fits
+                    assert self._headroom(sched) >= self._pages_needed(req)
+                sched.commit_admission(slot, prefilled=covered)
+                slot.page_ids = [pid for pid, _ in matched]
+                slot.registered_pages = len(matched) - int(has_partial)
+                self._pt[slot.index, :] = -1
+                self._pt[slot.index, :len(matched)] = slot.page_ids
+                state = self._reset(state, slot.index)
+
+            # 3) chunked prefill: one page-sized chunk per PREFILL slot
+            for slot in sched.prefill_slots():
+                req = slot.request
+                # chunk-time adoption: a page a CONCURRENT slot registered
+                # since our admission can be attached instead of recomputed
+                # (same-wave admissions of a common prefix share this way)
+                while (self._cache is not None and req.tokens is not None
+                       and slot.pos % self.page_size == 0
+                       and slot.pos + self.page_size <= req.prompt_len - 1
+                       and slot.pos // self.page_size == len(slot.page_ids)):
+                    pid = self._cache.match_page(
+                        np.asarray(req.tokens), slot.pos)
+                    if pid is None:
+                        break
+                    slot.page_ids.append(pid)
+                    self._pt[slot.index, len(slot.page_ids) - 1] = pid
+                    slot.pos += self.page_size
+                    slot.registered_pages = len(slot.page_ids)
+                size = min(self.page_size, req.prompt_len - slot.pos)
+                pools = self._ensure_writable(
+                    slot, slot.pos, slot.pos + size, pools)
+                st_row = self._extract(state, slot.index)
+                pt_row = jnp.asarray(self._pt[slot.index:slot.index + 1])
+                logits, st_row, pools = self._step(
+                    self.params, self._chunk_batch(req, slot.pos, size),
+                    st_row, pools, pt_row)
+                state = self._insert(state, st_row, slot.index)
+                slot.pos += size
+                prefill_chunks += 1
+                if self._cache is not None and req.tokens is not None:
+                    slot.registered_pages = self._cache.register_full(
+                        np.asarray(req.tokens),
+                        min(slot.pos, req.prompt_len) // self.page_size,
+                        slot.page_ids, slot.registered_pages)
+                if slot.pos == req.prompt_len:
+                    sched.finish_prefill(slot)
+                    if self._cache is not None and req.tokens is not None \
+                            and self._headroom(sched) >= 1:
+                        self._cache.register_partial(
+                            np.asarray(req.tokens), slot.page_ids[-1])
+                    first = int(self._sample(logits, self._sample_key())[0])
+                    outcome = sched.record_token(slot, first)
+                    if outcome is not None:
+                        close(slot, "completed" if outcome == "done"
+                              else "cancelled")
 
             active = sched.active_slots()
             if not active:
-                continue    # everything admitted finished at prefill
+                if not sched.prefill_slots() and sched.queue:
+                    # nothing live and the admission loop still left the
+                    # queue untouched: the forced unshared-admission path
+                    # guarantees this is unreachable unless accounting broke
+                    raise RuntimeError(
+                        "serve deadlock: queued requests but no admissible "
+                        "slot (page-pool accounting bug)")
+                continue
 
-            # 2) one decode step over the full fixed-shape batch; each slot
+            # 4) one decode step over the full fixed-shape batch; each slot
             # consumes its last sampled token at position slot.pos
+            for slot in active:
+                pools = self._ensure_writable(
+                    slot, slot.pos, slot.pos + 1, pools)
             tokens_row = [s.last_token for s in sched.slots]
             pos_row = [min(s.pos, self.max_len - 1) for s in sched.slots]
-            logits, cache = self._decode(
-                self.params, self._decode_batch(tokens_row, pos_row), cache)
+            active_row = [s.state is SlotState.ACTIVE for s in sched.slots]
+            logits, state, pools = self._step(
+                self.params,
+                self._decode_batch(tokens_row, pos_row, active_row),
+                state, pools, jnp.asarray(self._pt))
             toks = np.asarray(self._sample(logits, self._sample_key()))
-            for slot in active:           # FREE rows: sampled but discarded
+            for slot in active:           # inactive rows: sampled, discarded
                 slot.pos += 1             # the fed token is now cached
-                if sched.record_token(slot, int(toks[slot.index])):
-                    finish(slot)
+                outcome = sched.record_token(slot, int(toks[slot.index]))
+                if outcome is not None:
+                    close(slot, "completed" if outcome == "done"
+                          else "cancelled")
 
         wall = time.perf_counter() - t0
-        lat = [r.latency_s for r in results.values()] or [0.0]
+        lat = [r.latency_s for r in results.values()
+               if r.status == "completed"] or [0.0]
         return ServeStats(
             requests_completed=sched.requests_completed,
+            requests_cancelled=sched.requests_cancelled,
             tokens_out=sched.tokens_out,
+            tokens_cancelled=sched.tokens_cancelled,
             wall_s=wall,
             tok_per_s=sched.tokens_out / max(wall, 1e-9),
             latency_p50_s=float(np.percentile(lat, 50)),
             latency_p95_s=float(np.percentile(lat, 95)),
             refills=sched.refills,
+            prefill_chunks=prefill_chunks,
+            prefix_hit_tokens=(self._cache.hit_tokens
+                               if self._cache is not None else 0),
+            prefix_lookup_tokens=(self._cache.lookup_tokens
+                                  if self._cache is not None else 0),
+            pages_total=self.num_pages,
+            pages_peak=self._pool.peak_in_use,
+            cow_splits=self._pool.cow_splits,
             results=results,
         )
 
 
 def make_random_requests(cfg, n: int, prompt_len: int, gen_len: int,
-                         seed: int = 0) -> list[Request]:
+                         seed: int = 0, **req_kw) -> list[Request]:
     """Uniform-random prompts (token ids, or embeds for embed-input
     frontends) — the synthetic serving workload."""
     rng = np.random.default_rng(seed)
@@ -193,9 +420,25 @@ def make_random_requests(cfg, n: int, prompt_len: int, gen_len: int,
         if cfg.embed_inputs:
             emb = rng.standard_normal(
                 (prompt_len, cfg.d_model)).astype(np.float32)
-            reqs.append(Request(rid, gen_len, embeds=emb))
+            reqs.append(Request(rid, gen_len, embeds=emb, **req_kw))
         else:
             toks = rng.integers(
                 0, cfg.vocab_size, prompt_len).astype(np.int32)
-            reqs.append(Request(rid, gen_len, tokens=toks))
+            reqs.append(Request(rid, gen_len, tokens=toks, **req_kw))
+    return reqs
+
+
+def make_shared_prefix_requests(cfg, n: int, prefix_len: int, prompt_len: int,
+                                gen_len: int, seed: int = 0) -> list[Request]:
+    """Workload with a common `prefix_len`-token prompt prefix (system-
+    prompt style): later admissions hit the prefix cache and share pages."""
+    assert 0 < prefix_len <= prompt_len
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, cfg.vocab_size, prefix_len).astype(np.int32)
+    reqs = []
+    for rid in range(n):
+        tail = rng.integers(
+            0, cfg.vocab_size, prompt_len - prefix_len).astype(np.int32)
+        reqs.append(Request(rid, gen_len,
+                            tokens=np.concatenate([prefix, tail])))
     return reqs

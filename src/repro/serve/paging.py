@@ -1,0 +1,245 @@
+"""Page-granular KV-cache bookkeeping: refcounted page pool + prefix cache.
+
+Pure-python/numpy state (no jax): the engine asks the pool for page ids and
+keeps the device-side pools (`models/decoding.py` paged leaves) in sync. A
+*page* is `page_size` consecutive token rows of every paged KV leaf; a
+request's logical page i lives at physical page `page_table[i]` in every
+layer's pool (vLLM-style: one id indexes all layers).
+
+Refcount discipline:
+
+- a live request holds one reference per page in its table;
+- the prefix cache holds one reference per registered entry;
+- a page with refcount 0 is on the free list. `decref` below zero raises —
+  double-frees are bugs, not warnings.
+
+Copy-on-write: writing token rows into a page with refcount > 1 must first
+`cow_split` it — allocate a fresh exclusive page, drop one reference on the
+shared one — and copy the device rows. The engine triggers this when a
+request appends to a page it shares with the prefix cache (or another
+request): e.g. the request that *registered* a partially-filled last prompt
+page COWs it on its first decode write, leaving the cached page frozen with
+prompt-only content.
+
+Prefix sharing is keyed by a rolling crc32 over whole prompt-token pages:
+``h_i = crc32(tokens[i*ps:(i+1)*ps], h_{i-1})``. A chain hash therefore
+commits to the full token prefix AND its absolute positions, which is what
+makes the cached K/V (RoPE'd at absolute positions) reusable. A single
+partial-page continuation per chain key is also cached (content-compared on
+lookup) so prompts that agree beyond the last full page boundary share it —
+that is the page the next appender COW-splits.
+"""
+from __future__ import annotations
+
+import zlib
+from collections import OrderedDict
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["PagePool", "PrefixCache"]
+
+
+class PagePool:
+    """Fixed set of `num_pages` refcounted pages of `page_size` token rows."""
+
+    def __init__(self, num_pages: int, page_size: int):
+        assert num_pages >= 1 and page_size >= 1
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.ref = np.zeros((num_pages,), np.int32)
+        # LIFO free list: reuse the hottest page first
+        self._free = list(range(num_pages - 1, -1, -1))
+        self.peak_in_use = 0
+        self.cow_splits = 0
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def alloc(self) -> int:
+        """Take a free page (refcount 1). Raises when exhausted — callers
+        gate allocations on reservations + cache eviction, so running dry
+        here is a bookkeeping bug."""
+        if not self._free:
+            raise RuntimeError("page pool exhausted (reservation bug)")
+        pid = self._free.pop()
+        assert self.ref[pid] == 0
+        self.ref[pid] = 1
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return pid
+
+    def incref(self, pid: int) -> None:
+        assert self.ref[pid] > 0, f"incref of free page {pid}"
+        self.ref[pid] += 1
+
+    def decref(self, pid: int) -> None:
+        if self.ref[pid] <= 0:
+            raise RuntimeError(f"double-free of page {pid}")
+        self.ref[pid] -= 1
+        if self.ref[pid] == 0:
+            self._free.append(pid)
+
+    def cow_split(self, pid: int) -> int:
+        """Resolve a write to shared page `pid`: allocate an exclusive
+        replacement and release one reference on the original. The caller
+        must copy the device rows pid -> new before writing."""
+        assert self.ref[pid] >= 2, f"cow_split of exclusive page {pid}"
+        new = self.alloc()
+        self.decref(pid)
+        self.cow_splits += 1
+        return new
+
+    def check(self) -> None:
+        """Invariant audit (used by the property tests): every page is
+        either free with refcount 0 or in use with refcount > 0, and the
+        free list holds no duplicates."""
+        free = set(self._free)
+        assert len(free) == len(self._free), "duplicate page on free list"
+        for pid in range(self.num_pages):
+            if pid in free:
+                assert self.ref[pid] == 0, f"freed page {pid} still referenced"
+            else:
+                assert self.ref[pid] > 0, f"leaked page {pid} (ref 0, not free)"
+
+
+def _page_hash(tokens: np.ndarray, prev: int) -> int:
+    return zlib.crc32(np.ascontiguousarray(tokens, np.int32).tobytes(), prev)
+
+
+class PrefixCache:
+    """Chain-hash -> page map for cross-request prompt-prefix sharing.
+
+    Entries hold one pool reference each; `evict_one` drops the oldest entry
+    whose page nobody else references (refcount 1), so pinned pages — shared
+    with a live request — are never evicted under them.
+    """
+
+    def __init__(self, pool: PagePool):
+        self.pool = pool
+        self._full: OrderedDict[int, int] = OrderedDict()       # chain -> pid
+        # chain -> (pid, fill, token bytes): one partial continuation per chain
+        self._partial: OrderedDict[int, tuple[int, int, bytes]] = OrderedDict()
+        self.hit_tokens = 0
+        self.lookup_tokens = 0
+
+    def __len__(self) -> int:
+        return len(self._full) + len(self._partial)
+
+    def evictable(self) -> int:
+        return sum(1 for pid in self._full.values() if self.pool.ref[pid] == 1) \
+            + sum(1 for pid, _, _ in self._partial.values()
+                  if self.pool.ref[pid] == 1)
+
+    def evict_one(self) -> bool:
+        """Drop one unpinned entry (oldest first); True if a page was freed."""
+        for table in (self._full, self._partial):
+            for key, entry in table.items():
+                pid = entry if isinstance(entry, int) else entry[0]
+                if self.pool.ref[pid] == 1:
+                    del table[key]
+                    self.pool.decref(pid)
+                    return True
+        return False
+
+    def match(self, tokens: np.ndarray, max_tokens: int):
+        """Longest cached prefix of `tokens`, capped at `max_tokens` tokens.
+
+        Returns (pages, covered): `pages` is a list of (pid, fill) in logical
+        order with one pool reference taken per page (the caller owns them —
+        decref on abandon), `covered` the token count they hold. The cap lets
+        callers keep >= 1 prompt token uncached (something must produce the
+        first sampled token's logits).
+        """
+        ps = self.pool.page_size
+        self.lookup_tokens += len(tokens)
+        pages: list[tuple[int, int]] = []
+        covered, chain = 0, 0
+        while covered + ps <= max_tokens:
+            nxt = _page_hash(tokens[covered:covered + ps], chain)
+            pid = self._full.get(nxt)
+            if pid is None:
+                break
+            chain = nxt
+            self._full.move_to_end(chain)
+            self.pool.incref(pid)
+            pages.append((pid, ps))
+            covered += ps
+        part = self._partial.get(chain)
+        if part is not None:
+            pid, fill, blob = part
+            if 0 < fill <= max_tokens - covered and \
+                    np.ascontiguousarray(tokens[covered:covered + fill],
+                                         np.int32).tobytes() == blob:
+                self._partial.move_to_end(chain)
+                self.pool.incref(pid)
+                pages.append((pid, fill))
+                covered += fill
+        self.hit_tokens += covered
+        return pages, covered
+
+    def abandon(self, pages: list, lookup_tokens: int) -> None:
+        """Roll back a `match` whose admission was deferred: release the
+        page references AND the hit/lookup counters, so a retried admission
+        does not inflate the prefix statistics."""
+        for pid, _ in pages:
+            self.pool.decref(pid)
+        self.hit_tokens -= sum(fill for _, fill in pages)
+        self.lookup_tokens -= lookup_tokens
+
+    def match_page(self, tokens: np.ndarray, covered: int) -> Optional[int]:
+        """Chunk-time lookup: the single full page at token offset `covered`
+        (page-aligned). Lets a request adopt a page that a CONCURRENTLY
+        prefilling request registered after this one was admitted — so even
+        same-wave admissions of a common prefix share pages. Takes one pool
+        reference on a hit."""
+        ps = self.pool.page_size
+        assert covered % ps == 0
+        chain = 0
+        for i in range((covered // ps) + 1):
+            chain = _page_hash(tokens[i * ps:(i + 1) * ps], chain)
+        pid = self._full.get(chain)
+        if pid is None:
+            return None
+        self._full.move_to_end(chain)
+        self.pool.incref(pid)
+        self.hit_tokens += ps
+        return pid
+
+    def register_full(self, tokens: np.ndarray, upto_page: int,
+                      page_ids: list[int], registered: int) -> int:
+        """Register full prompt pages [registered, upto_page) of a request
+        (token content final — chunked prefill has written their K/V).
+        Returns the new `registered` watermark."""
+        ps = self.pool.page_size
+        chain = 0
+        for i in range(upto_page):
+            chain = _page_hash(tokens[i * ps:(i + 1) * ps], chain)
+            if i < registered:
+                continue
+            if chain not in self._full:
+                self._full[chain] = page_ids[i]
+                self.pool.incref(page_ids[i])
+        return max(registered, upto_page)
+
+    def register_partial(self, tokens: np.ndarray, pid: int) -> bool:
+        """Register the final, partially-filled prompt page (fill = len %
+        page_size tokens). The owner COWs it on its next write, freezing the
+        cached copy at prompt-only content."""
+        ps = self.pool.page_size
+        fill = len(tokens) % ps
+        if fill == 0:
+            return False
+        chain = 0
+        for i in range(len(tokens) // ps):
+            chain = _page_hash(tokens[i * ps:(i + 1) * ps], chain)
+        if chain in self._partial:
+            return False
+        blob = np.ascontiguousarray(tokens[-fill:], np.int32).tobytes()
+        self._partial[chain] = (pid, fill, blob)
+        self.pool.incref(pid)
+        return True

@@ -1,13 +1,21 @@
-"""Test-only helpers: a graceful fallback when `hypothesis` is absent.
+"""Test-only helpers: property-based testing with or without `hypothesis`.
 
 The property tests use hypothesis when installed. Offline images may not
-ship it; importing `given`/`settings`/`st` from here keeps the rest of each
-test module collectible — property tests become individually-skipped tests
-instead of a module-level collection error.
+ship it; importing `given`/`settings`/`st` from here keeps each test module
+collectible either way — and, unlike the old skip-stub, the fallback RUNS
+the property tests, drawing examples from a seeded generator instead of
+skipping them. Shrinking and failure databases are hypothesis luxuries; the
+invariants still get exercised on every run, with the failing example's
+kwargs in the assertion message for reproduction.
 
 Usage in test modules:
 
     from repro.testing import given, settings, st
+
+Supported fallback strategies (the subset this repo uses): ``st.integers``,
+``st.floats``, ``st.booleans``, ``st.sampled_from``, ``st.lists``,
+``st.tuples``, plus ``.map``/``.filter`` chaining. ``@settings`` honors
+``max_examples`` (default 20) and ignores the rest.
 """
 from __future__ import annotations
 
@@ -15,33 +23,100 @@ try:
     from hypothesis import given, settings, strategies as st  # noqa: F401
     HAVE_HYPOTHESIS = True
 except ImportError:  # pragma: no cover - depends on environment
+    import functools
+    import inspect
+    import random
+
     HAVE_HYPOTHESIS = False
+    _DEFAULT_EXAMPLES = 20
+    _FILTER_TRIES = 1000
 
     class _Strategy:
-        """Opaque stand-in supporting the chaining used at decoration time."""
+        """A draw(rng) -> value sampler supporting map/filter chaining."""
 
-        def map(self, _fn):
-            return self
+        def __init__(self, draw):
+            self._draw = draw
 
-        def filter(self, _fn):
-            return self
+        def draw(self, rng):
+            return self._draw(rng)
 
-        def flatmap(self, _fn):
-            return self
+        def map(self, fn):
+            return _Strategy(lambda rng: fn(self._draw(rng)))
+
+        def filter(self, pred):
+            def draw(rng):
+                for _ in range(_FILTER_TRIES):
+                    val = self._draw(rng)
+                    if pred(val):
+                        return val
+                raise RuntimeError("filter predicate too restrictive")
+            return _Strategy(draw)
+
+        def flatmap(self, fn):
+            return _Strategy(lambda rng: fn(self._draw(rng)).draw(rng))
 
     class _St:
-        def __getattr__(self, _name):
-            return lambda *a, **kw: _Strategy()
+        @staticmethod
+        def integers(min_value=0, max_value=2 ** 31 - 1):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(options):
+            options = list(options)
+            return _Strategy(lambda rng: options[rng.randrange(len(options))])
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.draw(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*strategies):
+            return _Strategy(
+                lambda rng: tuple(s.draw(rng) for s in strategies))
 
     st = _St()
 
-    def settings(*_a, **_kw):
-        return lambda fn: fn
-
-    def given(*_a, **_kw):
-        import pytest
-
+    def settings(*, max_examples: int = _DEFAULT_EXAMPLES, **_kw):
         def deco(fn):
-            return pytest.mark.skip(
-                reason="hypothesis not installed (property test)")(fn)
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def run(*args, **kwargs):
+                # @settings may sit above @given (attribute lands on `run`)
+                # or below it (attribute lands on `fn`)
+                n = getattr(run, "_max_examples",
+                            getattr(fn, "_max_examples", _DEFAULT_EXAMPLES))
+                # deterministic per-test seed: same examples every run
+                rng = random.Random(fn.__name__)
+                for i in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    try:
+                        fn(*args, **kwargs, **drawn)
+                    except Exception as e:  # surface the failing example
+                        raise AssertionError(
+                            f"property test failed on example {i}: "
+                            f"{drawn!r}") from e
+            # pytest must see only the NON-drawn parameters (fixtures);
+            # the drawn ones are supplied here, not by fixture lookup
+            sig = inspect.signature(fn)
+            run.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items()
+                if name not in strategies])
+            del run.__wrapped__
+            return run
         return deco

@@ -221,3 +221,52 @@ def test_compact_state_checkpoint_roundtrip(tmp_path):
                      s_res["params_trainable"]) == 0.0
     if s_cont["opt"]:
         assert _max_diff(s_cont["opt"], s_res["opt"]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# MoE batched (expert) compact backward: parity vs dense per-expert einsum
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_experts", [2, 4])
+@pytest.mark.parametrize("n_sel", [1, 3])
+def test_smm_batched_compact_matches_per_expert_dense(n_experts, n_sel):
+    """`_smm_batched_compact` (jnp einsum backward, the MoE expert path) must
+    emit per-expert compact dW identical to the dense per-expert einsum
+    gathered at the selection — including odd n_sel — with zero cotangent on
+    the (gradient-stopped) full weight. This is the oracle the future Pallas
+    batched-dW kernel (ROADMAP Kernels open item) will be verified against."""
+    from repro.core.sparse_update import SelSpec, _smm_batched_compact
+    spec = SelSpec(block=8, n_shards=2, n_sel=n_sel, n_blocks=4)
+    e, c, k = n_experts, 12, 16
+    n = spec.n_shards * spec.n_blocks * spec.block
+    kx, kw, kc, ki = jax.random.split(jax.random.PRNGKey(42), 4)
+    x = jax.random.normal(kx, (e, c, k), jnp.float32)
+    w = jax.random.normal(kw, (e, k, n), jnp.float32)
+    cot = jax.random.normal(kc, (e, c, n), jnp.float32)
+    idx = jnp.sort(jnp.stack([
+        jax.random.permutation(jax.random.fold_in(ki, s),
+                               spec.n_blocks)[:n_sel]
+        for s in range(spec.n_shards)]), axis=1).astype(jnp.int32)
+    w_sel = jnp.zeros((e, k, spec.n_shards, n_sel, spec.block), jnp.float32)
+
+    out = _smm_batched_compact(x, w, w_sel, idx, spec)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(jnp.einsum("eck,ekn->ecn", x, w)),
+                               rtol=1e-5, atol=1e-5)
+
+    def loss(x, w, w_sel):
+        return jnp.vdot(_smm_batched_compact(x, w, w_sel, idx, spec), cot)
+
+    dx, dw, dw_sel = jax.grad(loss, argnums=(0, 1, 2))(x, w, w_sel)
+    assert np.all(np.asarray(dw) == 0.0)      # full weight: gradient stopped
+
+    for ei in range(e):                       # dense per-expert oracle
+        dw_dense = jnp.einsum("ck,cn->kn", x[ei], cot[ei],
+                              preferred_element_type=jnp.float32)
+        dwb = dw_dense.reshape(k, spec.n_shards, spec.n_blocks, spec.block)
+        expect = jnp.take_along_axis(dwb, idx[None, :, :, None], axis=2)
+        np.testing.assert_allclose(np.asarray(dw_sel[ei]),
+                                   np.asarray(expect), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(dx), np.asarray(jnp.einsum("ecn,ekn->eck", cot, w)),
+        rtol=1e-5, atol=1e-5)

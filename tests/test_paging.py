@@ -1,0 +1,194 @@
+"""Property-based tests for the page allocator and prefix cache.
+
+Model-based: a python-dict reference tracks who holds references to which
+page; after arbitrary op sequences the pool must agree with the model,
+never double-free, never leak (releasing every reference returns the pool
+to fully-free). Runs under hypothesis when installed, and under the
+seeded-random fallback in `repro.testing` otherwise — either way the
+invariants are exercised, not skipped.
+"""
+import numpy as np
+import pytest
+
+from repro.testing import given, settings, st
+from repro.serve.paging import PagePool, PrefixCache
+
+PS = 4
+
+
+# ---------------------------------------------------------------------------
+# PagePool: alloc/free/incref/decref/cow_split never double-free, never leak
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    ops=st.lists(st.tuples(st.integers(0, 3), st.integers(0, 2 ** 20)),
+                 min_size=1, max_size=120),
+    num_pages=st.integers(1, 8),
+)
+def test_page_pool_model(ops, num_pages):
+    pool = PagePool(num_pages, PS)
+    held = []                       # references we own, with multiplicity
+    for op, arg in ops:
+        if op == 0 and pool.free_pages:                    # alloc
+            held.append(pool.alloc())
+        elif op == 1 and held:                             # incref
+            pid = held[arg % len(held)]
+            pool.incref(pid)
+            held.append(pid)
+        elif op == 2 and held:                             # decref
+            pool.decref(held.pop(arg % len(held)))
+        elif op == 3:                                      # cow_split
+            shared = sorted({p for p in held if pool.ref[p] >= 2})
+            if shared and pool.free_pages:
+                pid = shared[arg % len(shared)]
+                held.remove(pid)
+                held.append(pool.cow_split(pid))
+        pool.check()
+        assert pool.in_use == len(set(held))
+        for pid in set(held):
+            assert pool.ref[pid] == held.count(pid)
+    for pid in list(held):          # release everything: no page may leak
+        pool.decref(pid)
+    pool.check()
+    assert pool.free_pages == num_pages
+
+
+def test_page_pool_double_free_raises():
+    pool = PagePool(2, PS)
+    pid = pool.alloc()
+    pool.decref(pid)
+    with pytest.raises(RuntimeError, match="double-free"):
+        pool.decref(pid)
+    pool.check()
+
+
+def test_cow_split_semantics():
+    pool = PagePool(3, PS)
+    pid = pool.alloc()
+    pool.incref(pid)                # shared between two holders
+    new = pool.cow_split(pid)
+    assert new != pid
+    assert pool.ref[pid] == 1 and pool.ref[new] == 1
+    assert pool.cow_splits == 1
+    pool.decref(pid)
+    pool.decref(new)
+    pool.check()
+    assert pool.free_pages == 3
+
+
+def test_alloc_exhausted_raises():
+    pool = PagePool(1, PS)
+    pool.alloc()
+    with pytest.raises(RuntimeError, match="exhausted"):
+        pool.alloc()
+
+
+# ---------------------------------------------------------------------------
+# PrefixCache: chain-hash matching returns the right pages, eviction frees
+# exactly the unpinned ones, and the whole thing releases cleanly
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2 ** 31 - 1),
+    n_reqs=st.integers(1, 8),
+    vocab=st.sampled_from([2, 3, 50]),      # tiny vocab: forced collisions
+)
+def test_prefix_cache_model(seed, n_reqs, vocab):
+    rng = np.random.default_rng(seed)
+    pool = PagePool(64, PS)
+    cache = PrefixCache(pool)
+    content = {}                    # pid -> token bytes it must represent
+
+    for _ in range(n_reqs):
+        plen = int(rng.integers(1, 4 * PS))
+        toks = rng.integers(0, vocab, plen).astype(np.int32)
+        pages, covered = cache.match(toks, plen - 1)
+        assert covered <= plen - 1
+        # every matched page must hold exactly the claimed prompt slice
+        off = 0
+        for pid, fill in pages:
+            assert content[pid][:fill * 4] == \
+                np.ascontiguousarray(toks[off:off + fill]).tobytes()[:fill * 4]
+            off += fill
+        held = [pid for pid, _ in pages]
+        n_full_matched = sum(1 for _, f in pages if f == PS)
+        if pages and pages[-1][1] < PS:
+            # appending to a shared partial page requires a COW split first
+            # (the engine copies the device rows; here we copy the content)
+            if pool.free_pages:
+                new = pool.cow_split(pages[-1][0])
+                lo = (len(held) - 1) * PS
+                content[new] = np.ascontiguousarray(
+                    toks[lo:lo + PS]).tobytes()
+                held[-1] = new
+            else:
+                pool.decref(held.pop())
+        # "prefill" the rest: allocate the remaining pages this prompt needs
+        n_pages = -(-plen // PS)
+        while len(held) < n_pages and pool.free_pages:
+            pid = pool.alloc()
+            lo = len(held) * PS
+            content[pid] = np.ascontiguousarray(
+                toks[lo:lo + PS]).tobytes()
+            held.append(pid)
+        if len(held) == n_pages:
+            reg = cache.register_full(toks, plen // PS, held, n_full_matched)
+            assert reg == plen // PS
+            if plen % PS and rng.random() < 0.7:
+                cache.register_partial(toks, held[-1])
+        pool.check()
+        for pid in held:            # request finishes
+            pool.decref(pid)
+        pool.check()
+
+    while cache.evict_one():        # drain the cache: nothing may leak
+        pool.check()
+    assert len(cache) == 0 or all(
+        pool.ref[e if isinstance(e, int) else e[0]] > 1
+        for t in (cache._full, cache._partial) for e in t.values())
+    assert pool.free_pages == pool.num_pages
+
+
+def test_prefix_cache_eviction_respects_pins():
+    pool = PagePool(4, PS)
+    cache = PrefixCache(pool)
+    toks = np.arange(2 * PS, dtype=np.int32)
+    a, b = pool.alloc(), pool.alloc()
+    cache.register_full(toks, 2, [a, b], 0)
+    pool.decref(a)                  # request done: only cache holds a
+    # b still held by "the request": eviction must free a but never b
+    assert cache.evict_one()
+    assert pool.ref[a] == 0 and pool.ref[b] == 2
+    assert not cache.evict_one()    # b is pinned
+    pool.decref(b)
+    assert cache.evict_one()
+    pool.check()
+    assert pool.free_pages == 4
+
+
+def test_prefix_match_is_content_checked():
+    """A partial-page entry only matches identical token content."""
+    pool = PagePool(4, PS)
+    cache = PrefixCache(pool)
+    toks = np.asarray([1, 2, 3, 4, 5, 6], np.int32)     # 1 full + 2 partial
+    pids = [pool.alloc(), pool.alloc()]
+    cache.register_full(toks, 1, pids, 0)
+    cache.register_partial(toks, pids[1])
+    same = np.asarray([1, 2, 3, 4, 5, 6, 9], np.int32)
+    pages, covered = cache.match(same, len(same) - 1)
+    assert covered == 6 and [f for _, f in pages] == [PS, 2]
+    for pid, _ in pages:
+        pool.decref(pid)
+    diff = np.asarray([1, 2, 3, 4, 5, 7, 9], np.int32)  # partial differs
+    pages, covered = cache.match(diff, len(diff) - 1)
+    assert covered == PS and [f for _, f in pages] == [PS]
+    for pid, _ in pages:
+        pool.decref(pid)
+    for pid in pids:
+        pool.decref(pid)
+    while cache.evict_one():
+        pass
+    pool.check()
+    assert pool.free_pages == 4

@@ -1,11 +1,17 @@
-"""Continuous-batching serving engine tests.
+"""Paged continuous-batching serving engine tests.
 
-Pins the two launch/serve.py accounting bugs this subsystem replaced
-(padded slots counted as completed requests and as generated tokens), the
-cache row ops behind slot refill (decode-vs-prefill parity when a request
-is admitted mid-flight into a dirty slot), the per-step PRNG split on the
-placeholder-embeds input path, sampling, the EOS hook, and the two
-satellite fixes (memory-budget solver warning, SIGINT opt-in preemption).
+The core of this suite is the cross-family serving PARITY contract: for
+every cache family (dense-paged llama3, ring+paged gemma, rwkv state,
+jamba hybrid state), the paged engine's greedy output must be
+token-identical to the contiguous batch=1 oracle (an explicit
+``D.prefill`` + ``D.decode_step`` loop that never touches the paged code
+paths), across prompt lengths straddling page boundaries and through
+mid-stream cancellation. On top of that: page accounting (cancelled and
+timed-out requests never count), prefix sharing (hit rate > 0, LOWER page
+peak than no-sharing, COW splits on shared partial pages), slot-refill
+parity, the per-step PRNG split for placeholder embeds, sampling, the EOS
+hook, and the PR-2 satellite fixes (memory-budget solver warning, SIGINT
+opt-in preemption).
 """
 import signal
 import warnings
@@ -19,10 +25,12 @@ from repro.configs import SparseUpdateConfig, get_smoke_config
 from repro.models import decoding as D
 from repro.models import transformer as T
 from repro.serve import Request, ServeEngine
-from repro.serve.engine import make_random_requests
+from repro.serve.engine import (make_random_requests,
+                                make_shared_prefix_requests)
 
 PROMPT_LEN = 16
 GEN_LEN = 8
+PAGE = 4          # small pages: multi-page prompts stay cheap to compile
 
 FAMILY_ARCHS = ("llama3-8b", "gemma3-4b", "rwkv6-3b", "jamba-1.5-large-398b")
 
@@ -34,8 +42,75 @@ def _engine(arch, num_slots, max_len=PROMPT_LEN + GEN_LEN, **kw):
                             max_len=max_len, **kw)
 
 
+def _oracle_decode(cfg, params, toks, gen_len, max_len):
+    """Contiguous batch=1 greedy ground truth: explicit prefill +
+    decode_step loop, no serve/paging code involved."""
+    logits, cache = D.prefill(cfg, params,
+                              {"tokens": jnp.asarray(toks)[None]},
+                              pad_to=max_len)
+    ref = [int(jnp.argmax(logits, -1)[0])]
+    for t in range(len(toks), len(toks) + gen_len - 1):
+        db = {"tokens": jnp.asarray([[ref[-1]]], jnp.int32),
+              "positions": jnp.full((1, 1), t, jnp.int32)}
+        logits, cache = D.decode_step(cfg, params, db, cache)
+        ref.append(int(jnp.argmax(logits, -1)[0]))
+    return ref
+
+
 # ---------------------------------------------------------------------------
-# accounting: padded/free slots must never count
+# cross-family parity: paged engine vs contiguous batch=1 oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_paged_parity_across_page_boundaries(arch):
+    """Greedy serving must be token-identical to the contiguous oracle for
+    prompts of PAGE-1 / PAGE / PAGE+1 tokens (chunked prefill hits the
+    partial-chunk, exact-page, and page-straddling admission paths)."""
+    cfg = get_smoke_config(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    gen = 6
+    max_len = PAGE + 1 + gen
+    engine = ServeEngine(cfg, params, num_slots=2, max_len=max_len,
+                         page_size=PAGE)
+    rng = np.random.default_rng(11)
+    for plen in (PAGE - 1, PAGE, PAGE + 1):
+        toks = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+        served = engine.run([Request(0, gen, tokens=toks)]).results[0].tokens
+        ref = _oracle_decode(cfg, params, toks, gen, max_len)
+        assert served == ref, (
+            f"{arch} plen={plen}: paged engine diverged from oracle")
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_paged_parity_midstream_cancellation(arch):
+    """A request cancelled after k streamed tokens must have produced
+    exactly the oracle's first k tokens, and its tokens/requests must land
+    in the cancelled counters only."""
+    cfg = get_smoke_config(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    gen, cut = 6, 3
+    max_len = PAGE + 1 + gen
+    toks = np.random.default_rng(13).integers(
+        0, cfg.vocab_size, PAGE + 1).astype(np.int32)
+    ref = _oracle_decode(cfg, params, toks, gen, max_len)
+
+    streamed = []
+
+    def cb(rid, tok):
+        streamed.append(tok)
+        return len(streamed) < cut
+
+    engine = ServeEngine(cfg, params, num_slots=2, max_len=max_len,
+                         page_size=PAGE)
+    stats = engine.run([Request(0, gen, tokens=toks, stream=cb)])
+    assert streamed == ref[:cut], f"{arch}: cancelled stream != oracle prefix"
+    assert stats.results[0].status == "cancelled"
+    assert stats.requests_completed == 0 and stats.tokens_out == 0
+    assert stats.requests_cancelled == 1 and stats.tokens_cancelled == cut
+
+
+# ---------------------------------------------------------------------------
+# accounting: padded/free slots and cancelled requests must never count
 # ---------------------------------------------------------------------------
 
 def test_accounting_no_pad_inflation():
@@ -53,8 +128,47 @@ def test_accounting_no_pad_inflation():
     assert stats.latency_p95_s >= stats.latency_p50_s >= 0.0
 
 
+def test_cancellation_accounting_regression():
+    """The PR-2 pad-slot bug class, now for cancellations: a cancelled
+    request must not count toward completed requests or generated tokens —
+    neither in the engine stats nor in the benchmark's accounting."""
+    cfg, engine = _engine("llama3-8b", num_slots=2, page_size=PAGE)
+    reqs = make_random_requests(cfg, 4, PROMPT_LEN, GEN_LEN, seed=0)
+    cut = GEN_LEN // 2
+    seen = {"n": 0}
+
+    def stop(rid, tok):
+        seen["n"] += 1
+        return seen["n"] < cut
+
+    reqs[1].stream = stop
+    stats = engine.run(reqs)
+    assert stats.requests_completed == 3
+    assert stats.requests_cancelled == 1
+    assert stats.tokens_out == 3 * GEN_LEN        # cancelled tokens excluded
+    assert stats.tokens_cancelled == cut
+    assert stats.results[1].status == "cancelled"
+    assert len(stats.results[1].tokens) == cut
+
+
+def test_timeout_cancels_without_counting():
+    """A request whose deadline passed while queued is dropped unadmitted;
+    it must not count toward completed requests or tokens."""
+    cfg, engine = _engine("llama3-8b", num_slots=1, page_size=PAGE)
+    toks = np.random.default_rng(5).integers(
+        0, cfg.vocab_size, PROMPT_LEN).astype(np.int32)
+    ok = Request(0, 4, tokens=toks)
+    late = Request(1, 4, tokens=toks, timeout_s=0.0)
+    stats = engine.run([ok, late])
+    assert stats.requests_completed == 1 and stats.tokens_out == 4
+    assert stats.requests_cancelled == 1
+    assert stats.results[1].status == "cancelled"
+    assert stats.results[1].tokens == []
+
+
 def test_benchmark_cli_exact_counts(capsys):
-    """The acceptance-criteria invocation, via the benchmark entrypoint."""
+    """The acceptance-criteria invocation, via the benchmark entrypoint —
+    including a cancelled request that must not inflate the counters."""
     import os
     import sys
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
@@ -70,6 +184,83 @@ def test_benchmark_cli_exact_counts(capsys):
     assert "requests_completed=7" in out
     assert f"tokens_out={7 * GEN_LEN}" in out
 
+    stats = serve_throughput.main(
+        ["--arch", "llama3-8b", "--smoke", "--requests", "8", "--batch", "4",
+         "--prompt-len", str(PROMPT_LEN), "--gen-len", str(GEN_LEN),
+         "--cancel-frac", "0.25"]
+    )["llama3-8b"]
+    assert stats.requests_completed == 6
+    assert stats.requests_cancelled == 2
+    assert stats.tokens_out == 6 * GEN_LEN
+
+
+# ---------------------------------------------------------------------------
+# prefix sharing: hit rate, COW, peak-page reduction — all token-identical
+# ---------------------------------------------------------------------------
+
+def test_prefix_sharing_hits_and_lowers_peak():
+    """System-prompt workload on the fully-paged family: sharing must show
+    prefix hits, COW splits on the shared partial page, a LOWER page-pool
+    peak than the same workload without sharing — and identical tokens."""
+    cfg = get_smoke_config("llama3-8b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+
+    def run(sharing):
+        engine = ServeEngine(cfg, params, num_slots=2, max_len=20,
+                             page_size=PAGE, num_pages=16,
+                             prefix_sharing=sharing)
+        return engine.run(make_shared_prefix_requests(
+            cfg, 8, prefix_len=12, prompt_len=14, gen_len=5, seed=3))
+
+    shared, plain = run(True), run(False)
+    assert shared.prefix_hit_rate > 0
+    assert shared.cow_splits >= 1
+    assert shared.pages_peak < plain.pages_peak
+    assert shared.prefill_chunks < plain.prefill_chunks   # compute skipped
+    assert plain.prefix_hit_tokens == 0
+    assert shared.requests_completed == plain.requests_completed == 8
+    for rid in shared.results:
+        assert shared.results[rid].tokens == plain.results[rid].tokens, (
+            "prefix sharing changed decoded tokens")
+
+
+def test_tight_pool_shared_prefix_cannot_deadlock():
+    """Regression: with a pool exactly as large as one request's worst case,
+    a prefix match can pin the very cache pages whose eviction the
+    reservation counts on (matched pages have ref 2, unevictable). The
+    engine must fall back to unshared admission — never spin forever — and
+    the rolled-back match must not inflate the prefix counters."""
+    cfg = get_smoke_config("llama3-8b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    prefix = rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+    tail = rng.integers(0, cfg.vocab_size, 2).astype(np.int32)
+    a = Request(0, 3, tokens=prefix)                          # registers 6 tokens
+    b = Request(1, 4, tokens=np.concatenate([prefix, tail]))  # needs all 3 pages
+    engine = ServeEngine(cfg, params, num_slots=1, max_len=12,
+                         page_size=PAGE, num_pages=3)
+    stats = engine.run([a, b])
+    assert stats.requests_completed == 2
+    assert stats.prefix_hit_tokens <= stats.prefix_lookup_tokens
+
+
+def test_prefix_sharing_gated_to_fully_paged_archs():
+    """Ring/recurrent state at a resume point is not reconstructable from
+    pages: sharing must silently disable for those families."""
+    assert D.supports_prefix_sharing(get_smoke_config("llama3-8b"))
+    for arch in ("gemma3-4b", "rwkv6-3b", "jamba-1.5-large-398b",
+                 "musicgen-medium"):
+        assert not D.supports_prefix_sharing(get_smoke_config(arch)), arch
+    _, engine = _engine("gemma3-4b", num_slots=2, page_size=PAGE)
+    assert not engine.prefix_sharing
+
+
+def test_state_only_arch_uses_no_pages():
+    cfg, engine = _engine("rwkv6-3b", num_slots=2, page_size=PAGE)
+    stats = engine.run(make_random_requests(cfg, 3, PROMPT_LEN, 4, seed=0))
+    assert stats.requests_completed == 3
+    assert stats.pages_total == 0 and stats.pages_peak == 0
+
 
 # ---------------------------------------------------------------------------
 # slot-refill parity: a request admitted mid-flight into a dirty slot must
@@ -78,7 +269,7 @@ def test_benchmark_cli_exact_counts(capsys):
 
 @pytest.mark.parametrize("arch", FAMILY_ARCHS)
 def test_slot_refill_parity(arch):
-    cfg, engine = _engine(arch, num_slots=2)
+    cfg, engine = _engine(arch, num_slots=2, page_size=PAGE)
     rng = np.random.default_rng(7)
 
     def req(rid, gen):
@@ -93,7 +284,7 @@ def test_slot_refill_parity(arch):
     assert stats.refills >= 1, "target was not admitted into a used slot"
     assert stats.requests_completed == 3
 
-    _, ref_engine = _engine(arch, num_slots=2)
+    _, ref_engine = _engine(arch, num_slots=2, page_size=PAGE)
     alone = ref_engine.run([Request(2, GEN_LEN, tokens=target.tokens,
                                     embeds=target.embeds)])
     assert alone.results[2].tokens == stats.results[2].tokens, (
@@ -102,10 +293,10 @@ def test_slot_refill_parity(arch):
 
 @pytest.mark.parametrize("arch", FAMILY_ARCHS)
 def test_engine_matches_ground_truth_decode(arch):
-    """Engine-vs-oracle parity: greedy serving must reproduce an explicit
-    prefill + decode_step loop (positions t = prompt_len..) exactly. Unlike
-    the refill parity test, the reference here does not go through the
-    engine, so systematic position/cache bugs cannot cancel out."""
+    """Engine-vs-oracle parity at the default page size (prompt spans one
+    page exactly). Unlike the refill parity test, the reference here does
+    not go through the engine, so systematic position/cache bugs cannot
+    cancel out."""
     cfg = get_smoke_config(arch)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     max_len = PROMPT_LEN + GEN_LEN
@@ -113,46 +304,29 @@ def test_engine_matches_ground_truth_decode(arch):
     rng = np.random.default_rng(11)
     toks = rng.integers(0, cfg.vocab_size, PROMPT_LEN).astype(np.int32)
     served = engine.run([Request(0, GEN_LEN, tokens=toks)]).results[0].tokens
-
-    logits, cache = D.prefill(cfg, params,
-                              {"tokens": jnp.asarray(toks)[None]},
-                              pad_to=max_len)
-    ref = [int(jnp.argmax(logits, -1)[0])]
-    for t in range(PROMPT_LEN, max_len - 1):
-        db = {"tokens": jnp.asarray([[ref[-1]]], jnp.int32),
-              "positions": jnp.full((1, 1), t, jnp.int32)}
-        logits, cache = D.decode_step(cfg, params, db, cache)
-        ref.append(int(jnp.argmax(logits, -1)[0]))
+    ref = _oracle_decode(cfg, params, toks, GEN_LEN, max_len)
     assert served == ref, f"{arch}: engine diverged from decode oracle"
 
 
 def test_short_prompt_mamba_conv_state_parity():
-    """Prompts shorter than d_conv-1 must yield a full-size (left-zero-
-    padded) conv history so cache_insert_row never partial-writes a slot."""
+    """Prompts shorter than d_conv-1 must yield the same (left-zero-padded)
+    conv history semantics as the full-prompt oracle."""
     cfg = get_smoke_config("jamba-1.5-large-398b")
     plen = cfg.ssm.d_conv - 2          # shorter than the conv history
     assert plen >= 1
     params = T.init_params(cfg, jax.random.PRNGKey(0))
-    engine = ServeEngine(cfg, params, num_slots=2, max_len=plen + GEN_LEN)
+    engine = ServeEngine(cfg, params, num_slots=2, max_len=plen + GEN_LEN,
+                         page_size=PAGE)
     toks = np.random.default_rng(5).integers(
         0, cfg.vocab_size, plen).astype(np.int32)
     served = engine.run([Request(0, GEN_LEN, tokens=toks)]).results[0].tokens
-
-    logits, cache = D.prefill(cfg, params,
-                              {"tokens": jnp.asarray(toks)[None]},
-                              pad_to=plen + GEN_LEN)
-    ref = [int(jnp.argmax(logits, -1)[0])]
-    for t in range(plen, plen + GEN_LEN - 1):
-        db = {"tokens": jnp.asarray([[ref[-1]]], jnp.int32),
-              "positions": jnp.full((1, 1), t, jnp.int32)}
-        logits, cache = D.decode_step(cfg, params, db, cache)
-        ref.append(int(jnp.argmax(logits, -1)[0]))
+    ref = _oracle_decode(cfg, params, toks, GEN_LEN, plen + GEN_LEN)
     assert served == ref
 
 
 def test_window_larger_than_max_len_serves():
     """sliding_window > max_len must serve (the ring is capped at the cache
-    capacity), and still match the decode oracle built the same way."""
+    capacity) for both window regimes."""
     cfg = get_smoke_config("gemma3-4b")
     assert cfg.sliding_window > 0
     prompt_len, gen_len = cfg.sliding_window, 4       # max_len > window
@@ -160,7 +334,7 @@ def test_window_larger_than_max_len_serves():
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     for plen in (prompt_len, short):
         engine = ServeEngine(cfg, params, num_slots=2,
-                             max_len=plen + gen_len)
+                             max_len=plen + gen_len, page_size=PAGE)
         reqs = make_random_requests(cfg, 3, plen, gen_len, seed=0)
         stats = engine.run(reqs)
         assert stats.requests_completed == 3
@@ -201,7 +375,7 @@ def test_embed_input_key_split_per_step():
 
 
 def test_embed_inputs_arch_serves():
-    cfg, engine = _engine("musicgen-medium", num_slots=2)
+    cfg, engine = _engine("musicgen-medium", num_slots=2, page_size=PAGE)
     stats = engine.run(make_random_requests(cfg, 3, PROMPT_LEN, 4, seed=0))
     assert stats.requests_completed == 3
     assert stats.tokens_out == 3 * 4
