@@ -19,7 +19,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref
-from repro.kernels.masked_dw import block_sparse_dw_kernel
+from repro.kernels.batched_dw import (batched_dw_kernel,
+                                      batched_dw_pipelined_kernel)
+from repro.kernels.masked_dw import (block_sparse_dw_kernel,
+                                     block_sparse_dw_pipelined_kernel)
 from repro.kernels.scatter_blocks import block_scatter_update_kernel
 from repro.launch.hlo_analysis import kernel_launch_count
 
@@ -61,7 +64,68 @@ def run() -> list[tuple]:
     jd = jax.jit(lambda x, dy: jnp.einsum("mk,mn->kn", x, dy))
     rows.append(("kernel/dense_dw", _time(jd, x, dy), "baseline"))
     rows += fusion_comparison()
+    rows += batched_dw_comparison()
     rows += train_step_comparison()
+    return rows
+
+
+def batched_dw_comparison() -> list[tuple]:
+    """MoE expert-batched compact dW: the single-launch `batched_dw` kernel
+    (grid spans experts x shards x selected blocks) vs the per-expert
+    loop-of-launches it replaces, plus the double-buffered `emit_pipeline`
+    variants of both dW kernels. Same eager-dispatch timing discipline as
+    `fusion_comparison` (each un-jitted pallas_call pays a full dispatch —
+    the cost the batching removes); launch-site counts are exact on any
+    backend."""
+    rows = []
+    rng = np.random.default_rng(5)
+    e, m, k, s, nb, blk = 4, 64, 64, 2, 8, 16
+    n_sel = 2                                   # ratio 0.25
+    n = s * nb * blk
+    x = jnp.asarray(rng.normal(size=(e, m, k)), jnp.float32)
+    dy = jnp.asarray(rng.normal(size=(e, m, n)), jnp.float32)
+    idx = jnp.asarray(
+        np.stack([rng.choice(nb, n_sel, replace=False) for _ in range(s)]),
+        jnp.int32)
+
+    def dw_batched(x, dy, idx):
+        return batched_dw_kernel(x, dy, idx, block=blk, tm=m, tk=k,
+                                 interpret=True)
+
+    def dw_batched_pipelined(x, dy, idx):
+        return batched_dw_pipelined_kernel(x, dy, idx, block=blk, tm=32,
+                                           tk=k, interpret=True)
+
+    def dw_per_expert_loop(x, dy, idx):         # pre-PR: one launch/expert
+        outs = [block_sparse_dw_kernel(x[ei], dy[ei], idx, block=blk,
+                                       tm=m, tk=k, interpret=True)
+                for ei in range(e)]
+        return jnp.stack(outs)
+
+    shape = f"e{e}m{m}k{k}s{s}nb{nb}b{blk}"
+    for variant, fn in (("fused", dw_batched),
+                        ("pipelined", dw_batched_pipelined),
+                        ("per_expert_loop", dw_per_expert_loop)):
+        us = _time(fn, x, dy, idx, n=3)          # eager: dispatch per launch
+        launches = _launches(fn, x, dy, idx)
+        rows.append((f"kernel/batched_dw_{variant}", us,
+                     f"launches={launches};eager_dispatch"))
+        RECORDS.append({"op": "batched_dw", "variant": variant,
+                        "shape": shape, "ratio": n_sel / nb, "us": us,
+                        "launches": launches, "timing": "eager_dispatch"})
+
+    def dw_pipelined(x2, dy2, idx):
+        return block_sparse_dw_pipelined_kernel(x2, dy2, idx, block=blk,
+                                                tm=32, tk=k, interpret=True)
+
+    us = _time(dw_pipelined, x[0], dy[0], idx, n=3)
+    launches = _launches(dw_pipelined, x[0], dy[0], idx)
+    rows.append(("kernel/dw_pipelined", us,
+                 f"launches={launches};eager_dispatch"))
+    RECORDS.append({"op": "masked_dw", "variant": "pipelined",
+                    "shape": f"m{m}k{k}s{s}nb{nb}b{blk}",
+                    "ratio": n_sel / nb, "us": us, "launches": launches,
+                    "timing": "eager_dispatch"})
     return rows
 
 

@@ -51,3 +51,26 @@ def pallas_compiler_params(**kwargs):
     cls = getattr(pltpu, "CompilerParams", None) \
         or getattr(pltpu, "TPUCompilerParams")
     return cls(**kwargs)
+
+
+_PIPELINE_PATCHED = False
+
+
+def ensure_pipeline_emulation() -> None:
+    """Make `pltpu.emit_pipeline` runnable in interpret mode off-TPU.
+
+    The mosaic pipeline helper sizes its DMA-slice tiling from the local
+    device kind (`assert kind[:5] == "TPU v"`), which trips on the CPU
+    backend even though interpret mode emulates the async copies fine. The
+    tiling only matters for truncating out-of-bounds edge blocks — our
+    kernels require tile-divisible shapes — so pinning a v4-class answer is
+    behavior-neutral. No-op on a real TPU backend."""
+    global _PIPELINE_PATCHED
+    if _PIPELINE_PATCHED or jax.default_backend() == "tpu":
+        return
+    try:
+        from jax._src.pallas.mosaic import pipeline as _pipeline
+        _pipeline._get_tpu_generation = lambda: 4
+    except (ImportError, AttributeError):  # future jax: probe may be gone
+        pass
+    _PIPELINE_PATCHED = True

@@ -36,8 +36,12 @@ the [*, n_shards, n_sel, block] layout:
    w.r.t. `w_sel` while the full weight enters the forward matmul with its
    gradient stopped.
 2. `_smm_compact` / `_smm_batched_compact` compute the identical forward
-   `x @ w` but their VJP emits the compact `compact_dw` result directly as
-   the cotangent of `w_sel` — no zero buffer, no full-shape scatter.
+   `x @ w` but their VJP emits the compact `compact_dw` /
+   `compact_dw_batched` result directly as the cotangent of `w_sel` — no
+   zero buffer, no full-shape scatter. Under `use_kernels` both are single
+   Pallas launches (`kernels.masked_dw` for 2D weights,
+   `kernels.batched_dw` for stacked expert weights: one grid over
+   experts x shards x selected blocks).
 3. `repro.optim.apply_updates_mixed` clips, applies the SGD/momentum/AdamW
    rule on the gathered blocks (gathering the matching optimizer-state
    blocks), and writes the result back with `scatter_param_blocks` (or the
@@ -231,6 +235,23 @@ def compact_dw(x2, dy2, idx, spec: SelSpec):
                       preferred_element_type=jnp.float32)
 
 
+def compact_dw_batched(x3, dy3, idx, spec: SelSpec):
+    """Expert-batched compute skip: per-expert dW for selected blocks only.
+
+    x3: [E, C, K], dy3: [E, C, N] -> [E, K, n_shards, n_sel, block].
+    Under `use_kernels` this is ONE Pallas launch for all experts x shards x
+    selected blocks (`kernels.batched_dw`); the jnp fallback below is the
+    oracle the kernel is verified against."""
+    if kernels_enabled():
+        from repro.kernels import ops as kops
+        return kops.block_sparse_dw_batched(x3, dy3, idx, spec)
+    e, m, _ = x3.shape
+    dyb = dy3.reshape(e, m, spec.n_shards, spec.n_blocks, spec.block)
+    dy_sel = jnp.take_along_axis(dyb, idx[None, None, :, :, None], axis=3)
+    return jnp.einsum("eck,ecsnb->eksnb", x3, dy_sel,
+                      preferred_element_type=jnp.float32)
+
+
 def _smm_bwd(spec: SelSpec, res, dy):
     x, w, idx = res
     k, n = w.shape[-2], w.shape[-1]
@@ -312,10 +333,7 @@ def _smmb_bwd(spec: SelSpec, res, dy):
     e, c, k = x.shape
     n = w.shape[-1]
     dx = jnp.einsum("ecn,ekn->eck", dy, w)
-    dyb = dy.reshape(e, c, spec.n_shards, spec.n_blocks, spec.block)
-    dy_sel = jnp.take_along_axis(dyb, idx[None, None, :, :, None], axis=3)
-    dw_sel = jnp.einsum("eck,ecsnb->eksnb", x, dy_sel,
-                        preferred_element_type=jnp.float32)
+    dw_sel = compact_dw_batched(x, dy, idx, spec)
     zeros = jnp.zeros((e, k, spec.n_shards, spec.n_blocks, spec.block), w.dtype)
     dw = jnp.put_along_axis(
         zeros, jnp.broadcast_to(idx[None, None, :, :, None],
@@ -338,12 +356,8 @@ def _smmbc_fwd(x, w, w_sel, idx, spec):
 
 def _smmbc_bwd(spec: SelSpec, res, dy):
     x, w, idx = res
-    e, c, k = x.shape
     dx = jnp.einsum("ecn,ekn->eck", dy, w)
-    dyb = dy.reshape(e, c, spec.n_shards, spec.n_blocks, spec.block)
-    dy_sel = jnp.take_along_axis(dyb, idx[None, None, :, :, None], axis=3)
-    dw_sel = jnp.einsum("eck,ecsnb->eksnb", x, dy_sel,
-                        preferred_element_type=jnp.float32)
+    dw_sel = compact_dw_batched(x, dy, idx, spec)
     return (dx.astype(x.dtype), jnp.zeros_like(w),
             dw_sel.astype(w.dtype), None)
 

@@ -24,6 +24,13 @@ innermost dimension, accumulated into a VMEM scratch across grid steps.
 MXU alignment: block and TK should be multiples of 128 on real hardware
 (full configs use channel_block=128); interpret-mode tests sweep smaller
 shapes against the ref.py oracle.
+
+`block_sparse_dw_pipelined_kernel` is the double-buffered variant (ROADMAP
+Kernels open item): x and dy stay in HBM (`memory_space=ANY`) and a
+`pltpu.emit_pipeline` inner grid streams the M tiles through VMEM with
+explicit double buffering — VMEM residency is two tiles per operand plus
+the [TK, block] accumulator no matter how large M grows. `kernels.ops`
+selects it when a whole contraction stripe stops fitting VMEM.
 """
 from __future__ import annotations
 
@@ -34,7 +41,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.compat import pallas_compiler_params
+from repro.compat import ensure_pipeline_emulation, pallas_compiler_params
 
 
 def _kernel(idx_ref, x_ref, dy_ref, out_ref, acc_ref, *, n_m: int):
@@ -91,6 +98,70 @@ def block_sparse_dw_kernel(x, dy, idx, *, block: int, tm: int = 128,
         compiler_params=pallas_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
+        interpret=interpret,
+    )(idx, x, dy)
+    return out
+
+
+def _pipelined_kernel(idx_ref, x_hbm, dy_hbm, out_ref, acc_ref, *,
+                      tm: int, tk: int, block: int, n_m: int, n_blocks: int):
+    si = pl.program_id(0)
+    ji = pl.program_id(1)
+    ki = pl.program_id(2)
+    blk_idx = si * n_blocks + idx_ref[si, ji]
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def body(x_ref, dy_ref):
+        acc_ref[...] += jax.lax.dot_general(
+            x_ref[...].astype(jnp.float32), dy_ref[...].astype(jnp.float32),
+            (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    pltpu.emit_pipeline(
+        body,
+        grid=(n_m,),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda mi: (mi, ki)),
+            pl.BlockSpec((tm, block), lambda mi: (mi, blk_idx)),
+        ],
+        out_specs=(),
+    )(x_hbm, dy_hbm)
+    out_ref[...] = acc_ref[...][:, None, None, :]
+
+
+def block_sparse_dw_pipelined_kernel(x, dy, idx, *, block: int, tm: int = 128,
+                                     tk: int = 128, interpret: bool = False):
+    """Double-buffered `block_sparse_dw_kernel`: same contract, but x/dy
+    live in HBM and an inner `emit_pipeline` streams the M tiles."""
+    ensure_pipeline_emulation()
+    m, k = x.shape
+    n = dy.shape[1]
+    n_shards, n_sel = idx.shape
+    tm = min(tm, m)
+    tk = min(tk, k)
+    assert m % tm == 0 and k % tk == 0 and n % (n_shards * block) == 0
+    n_blocks = n // (n_shards * block)
+    n_m = m // tm
+
+    grid = (n_shards, n_sel, k // tk)
+    out = pl.pallas_call(
+        functools.partial(_pipelined_kernel, tm=tm, tk=tk, block=block,
+                          n_m=n_m, n_blocks=n_blocks),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+                pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+            ],
+            out_specs=pl.BlockSpec(
+                (tk, 1, 1, block),
+                lambda si, ji, ki, idx_ref: (ki, si, ji, 0)),
+            scratch_shapes=[pltpu.VMEM((tk, block), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((k, n_shards, n_sel, block),
+                                       jnp.float32),
+        compiler_params=pallas_compiler_params(
+            dimension_semantics=("parallel", "parallel", "parallel")),
         interpret=interpret,
     )(idx, x, dy)
     return out

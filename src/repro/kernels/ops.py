@@ -15,8 +15,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from typing import Optional
+
+from repro.kernels.batched_dw import (batched_dw_kernel,
+                                      batched_dw_pipelined_kernel)
 from repro.kernels.block_act_prune import block_act_prune_kernel
-from repro.kernels.masked_dw import block_sparse_dw_kernel
+from repro.kernels.masked_dw import (block_sparse_dw_kernel,
+                                     block_sparse_dw_pipelined_kernel)
 
 
 def _interpret() -> bool:
@@ -31,17 +36,52 @@ def _pick_tile(r: int, cap: int = 256) -> int:
     return 1
 
 
-def block_sparse_dw(x2, dy2, idx, spec):
+# Budget for choosing the double-buffered dW variants: once a whole
+# contraction stripe ([M, TK] activations + [M, block] dY, the worst case
+# the automatic pallas pipeline may keep resident while it revisits M
+# tiles) exceeds this, route through the `emit_pipeline` kernels whose VMEM
+# footprint is two in-flight tiles per operand + the accumulator no matter
+# how long the contraction is. ~half of a v4 core's 16 MiB VMEM.
+VMEM_STRIPE_BUDGET_BYTES = 8 * 1024 * 1024
+
+
+def _use_pipelined(m: int, tk: int, block: int, itemsize: int,
+                   pipelined: Optional[bool]) -> bool:
+    if pipelined is not None:
+        return pipelined
+    return m * (tk + block) * itemsize > VMEM_STRIPE_BUDGET_BYTES
+
+
+def block_sparse_dw(x2, dy2, idx, spec, pipelined: Optional[bool] = None):
     """compact_dw kernel entry (see core.sparse_update.compact_dw).
 
     x2: [M, K], dy2: [M, N], idx: [n_shards, n_sel] ->
     [K, n_shards, n_sel, block] fp32, in ONE launch for all shards.
+    pipelined: force the double-buffered variant (None = auto by VMEM
+    stripe residency).
     """
     m, k = x2.shape
-    return block_sparse_dw_kernel(x2, dy2, idx, block=spec.block,
-                                  tm=_pick_tile(m, 128),
-                                  tk=_pick_tile(k, 128),
-                                  interpret=_interpret())
+    tm, tk = _pick_tile(m, 128), _pick_tile(k, 128)
+    kern = block_sparse_dw_pipelined_kernel if _use_pipelined(
+        m, tk, spec.block, x2.dtype.itemsize, pipelined) \
+        else block_sparse_dw_kernel
+    return kern(x2, dy2, idx, block=spec.block, tm=tm, tk=tk,
+                interpret=_interpret())
+
+
+def block_sparse_dw_batched(x3, dy3, idx, spec, pipelined: Optional[bool] = None):
+    """Expert-batched compact dW (see core.sparse_update.compact_dw_batched).
+
+    x3: [E, C, K], dy3: [E, C, N], idx: [n_shards, n_sel] ->
+    [E, K, n_shards, n_sel, block] fp32, in ONE launch for all experts and
+    shards (the MoE expert leaf's whole backward is a single kernel)."""
+    e, m, k = x3.shape
+    tm, tk = _pick_tile(m, 128), _pick_tile(k, 128)
+    kern = batched_dw_pipelined_kernel if _use_pipelined(
+        m, tk, spec.block, x3.dtype.itemsize, pipelined) \
+        else batched_dw_kernel
+    return kern(x3, dy3, idx, block=spec.block, tm=tm, tk=tk,
+                interpret=_interpret())
 
 
 def block_scatter_update(w, vals, idx, spec):
@@ -52,6 +92,12 @@ def block_scatter_update(w, vals, idx, spec):
     w:    [K, *lead, N]                 (N = n_shards * n_blocks * block)
     vals: [K, *lead, n_shards, n_sel, block]
     idx:  [K, n_shards, n_sel]
+
+    Stacked EXPERT leaves ride the same launch: an MoE weight
+    [K, E, d, N] flattens its (E, d) lead dims into the kernel's row
+    dimension R — the block rule is elementwise per row, so expert
+    boundaries need no grid dimension of their own and the writeback stays
+    one launch regardless of n_experts.
     """
     from repro.kernels.scatter_blocks import block_scatter_update_kernel
 
@@ -75,6 +121,11 @@ def fused_block_optimizer(oc, p, g_sel, idx, spec, mu, nu, lr, t):
     p: [K, *lead, N]; g_sel: [K, *lead, n_shards, n_sel, block];
     idx: [K, n_shards, n_sel]; mu/nu: fp32 like p or None.
     Returns (p', mu', nu') with None for absent state.
+
+    Stacked EXPERT leaves ([K, E, d, N] with compact grads
+    [K, E, d, n_shards, n_sel, block]) flatten (E, d) into the row
+    dimension like `block_scatter_update` — the optimizer stays one launch
+    per leaf independent of n_experts.
     """
     from repro.kernels.fused_block_opt import fused_block_opt_kernel
 

@@ -16,6 +16,20 @@ def block_sparse_dw_ref(x, dy, idx, block: int):
                       dy_sel.astype(jnp.float32))
 
 
+def batched_dw_ref(x, dy, idx, block: int):
+    """Per-expert compact dW oracle: x: [E,C,K], dy: [E,C,N],
+    idx: [n_shards,n_sel] -> [E, K, n_shards, n_sel, block] fp32 (the
+    expert-batched compact-path layout; a dense per-expert einsum gathered
+    at the selection)."""
+    e, m, k = x.shape
+    n = dy.shape[-1]
+    n_shards, n_sel = idx.shape
+    dyb = dy.reshape(e, m, n_shards, n // (n_shards * block), block)
+    dy_sel = jnp.take_along_axis(dyb, idx[None, None, :, :, None], axis=3)
+    return jnp.einsum("eck,ecsjb->eksjb", x.astype(jnp.float32),
+                      dy_sel.astype(jnp.float32))
+
+
 def _block_idx5(idx, r: int, block: int):
     """[K, S, n_sel] -> broadcast gather/scatter index [K, R, S, n_sel, blk]."""
     k, s, n_sel = idx.shape

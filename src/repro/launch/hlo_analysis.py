@@ -380,18 +380,6 @@ def _iter_sub_jaxprs(val):
             yield from _iter_sub_jaxprs(v)
 
 
-def _count_pallas_eqns(jaxpr) -> int:
-    n = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "pallas_call":
-            n += 1
-            continue   # the kernel body jaxpr holds no further launches
-        for val in eqn.params.values():
-            for sub in _iter_sub_jaxprs(val):
-                n += _count_pallas_eqns(sub)
-    return n
-
-
 def kernel_launch_count(obj) -> int:
     """Static Pallas/Mosaic kernel-launch sites in a lowered train step.
 
@@ -406,8 +394,46 @@ def kernel_launch_count(obj) -> int:
     O(K x n_shards)."""
     if isinstance(obj, str):
         return len(_KERNEL_CALL_RE.findall(obj))
+    return sum(kernel_launch_breakdown(obj).values())
+
+
+def kernel_launch_breakdown(obj) -> dict[str, int]:
+    """`kernel_launch_count` split by kernel name (jaxpr path only).
+
+    Walks the same recursion as `_count_pallas_eqns` but keys each
+    `pallas_call` site by its kernel function name (`eqn.params["name"]`),
+    so a test can certify the per-KERNEL launch budget of a lowered train
+    step — e.g. the MoE compact step must show exactly one `batched_dw`
+    site and one fused-optimizer site per expert-sharded leaf, independent
+    of n_experts / K / n_shards."""
     jaxpr = getattr(obj, "jaxpr", obj)      # ClosedJaxpr -> Jaxpr
-    return _count_pallas_eqns(jaxpr)
+    out: dict[str, int] = {}
+
+    def site_name(params) -> str:
+        # "name_and_src_info" renders as "<fn> at <file>:<line>"; the kernel
+        # fns are private `_kernel`s, so key by their defining module stem.
+        info = str(params.get("name_and_src_info",
+                              params.get("name", "")) or "pallas_call")
+        fn = info.split(" at ")[0]
+        if " at " in info:
+            path = info.split(" at ")[1].rsplit(":", 1)[0]
+            stem = path.replace("\\", "/").rsplit("/", 1)[-1]
+            stem = stem[:-3] if stem.endswith(".py") else stem
+            return f"{stem}.{fn}"
+        return fn
+
+    def walk(jx):
+        for eqn in jx.eqns:
+            if eqn.primitive.name == "pallas_call":
+                name = site_name(eqn.params)
+                out[name] = out.get(name, 0) + 1
+                continue
+            for val in eqn.params.values():
+                for sub in _iter_sub_jaxprs(val):
+                    walk(sub)
+
+    walk(jaxpr)
+    return out
 
 
 def while_trip_counts(text: str) -> list[int]:

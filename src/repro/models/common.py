@@ -26,6 +26,16 @@ def split_keys(key, n: int):
     return list(jax.random.split(key, n))
 
 
+def last_valid(x, length):
+    """x[:, length-1] per row ([B, S, ...] -> [B, ...]); x[:, -1] when
+    `length` is None (serving chunks are padded to a fixed shape — the last
+    VALID position is per-row data, not the last array position)."""
+    if length is None:
+        return x[:, -1]
+    idx = length.reshape((-1,) + (1,) * (x.ndim - 1))
+    return jnp.take_along_axis(x, idx - 1, axis=1)[:, 0]
+
+
 def tree_size_bytes(tree) -> int:
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
 

@@ -22,6 +22,7 @@ from repro.models import mamba as M
 from repro.models import moe as MOE
 from repro.models import rwkv6 as R
 from repro.models import transformer as T
+from repro.models.common import last_valid
 from repro.sharding import constrain
 
 
@@ -224,15 +225,16 @@ def copy_pool_rows(pools, src_row, dst_row, n: int):
     return jax.tree.map(cp, pools)
 
 
-def _paged_block(cfg, kind: str, p, x, start, active, st_c, pl_c, page_table,
-                 page_size: int):
+def _paged_block(cfg, kind: str, p, x, start, active, length, st_c, pl_c,
+                 page_table, page_size: int):
     """One scan step of `paged_step`; mirrors `_decode_block` for s >= 1."""
     def attn(sub_p, h, role, window, st, pl):
         if role == "ring":
             return L.chunk_ring_attention(sub_p, cfg, h, start, active, st,
-                                          window=window)
+                                          window=window, length=length)
         a, pool = L.chunk_paged_attention(sub_p, cfg, h, start, active, pl,
-                                          page_table, page_size=page_size)
+                                          page_table, page_size=page_size,
+                                          length=length)
         return a, pool
 
     if kind in ("dense", "moe"):
@@ -277,7 +279,7 @@ def _paged_block(cfg, kind: str, p, x, start, active, st_c, pl_c, page_table,
                 x = x + a
             else:
                 y, new_st[sub] = M.apply_mamba(sp["mamba"], cfg, h,
-                                               cache=st_c[sub])
+                                               cache=st_c[sub], length=length)
                 x = x + y
             h = L.apply_norm(sp["ffn_ln"], x)
             if T._moe_at(cfg, i):
@@ -288,10 +290,12 @@ def _paged_block(cfg, kind: str, p, x, start, active, st_c, pl_c, page_table,
         return x, new_st, new_pl
     if kind == "rwkv":
         h = L.apply_norm(p["time_ln"], x)
-        y, tc = R.apply_time_mix(p["time"], cfg, h, cache=st_c["time"])
+        y, tc = R.apply_time_mix(p["time"], cfg, h, cache=st_c["time"],
+                                 length=length)
         x = x + y
         h = L.apply_norm(p["chan_ln"], x)
-        y, cc = R.apply_channel_mix(p["chan"], cfg, h, cache=st_c["chan"])
+        y, cc = R.apply_channel_mix(p["chan"], cfg, h, cache=st_c["chan"],
+                                    length=length)
         return x + y, {"time": tc, "chan": cc}, {}
     raise ValueError(kind)
 
@@ -300,14 +304,20 @@ def paged_step(cfg, params, batch, state, pools, page_table, *,
                page_size: int):
     """s >= 1 tokens per batch row against the paged serve caches.
 
-    batch: {"tokens" [B,S] | "embeds" [B,S,d], "start" [B], "active" [B]}.
-    `start` is the per-row token count already cached (the chunk occupies
-    positions start..start+S); rows with active=False keep ALL their state
-    (per-row leaves are row-selected here, pool writes are dropped inside
-    the attention). Returns (last-position logits [B, V], state, pools).
+    batch: {"tokens" [B,S] | "embeds" [B,S,d], "start" [B], "active" [B],
+    "length" [B] (optional, default S)}. `start` is the per-row token count
+    already cached (the chunk occupies positions start..start+length); rows
+    with active=False keep ALL their state (per-row leaves are row-selected
+    here, pool writes are dropped inside the attention). `length` lets the
+    engine pad every prefill chunk to one fixed page-sized shape — a single
+    trace for all prompt lengths — with padded positions (j >= length)
+    contributing nothing: cache/pool writes dropped, recurrent state
+    frozen, and the returned logits taken at each row's position length-1.
+    Returns (last-valid-position logits [B, V], state, pools).
     """
     start = batch["start"]
     active = batch["active"]
+    length = batch.get("length")
     pair = (params, None)
     x = T.embed_tokens(cfg, pair, batch)
 
@@ -324,15 +334,17 @@ def paged_step(cfg, params, batch, state, pools, page_table, *,
             p_l, st_l, pl_l = xs
             x = constrain(x, "batch", "seq", "model_d")
             x, st_out, pl_out = _paged_block(
-                cfg, seg.kind, p_l, x, start, active, st_l, pl_l,
+                cfg, seg.kind, p_l, x, start, active, length, st_l, pl_l,
                 page_table, page_size)
             return x, (merge(st_out, st_l), pl_out)
 
         x, (new_state[seg.name], new_pools[seg.name]) = jax.lax.scan(
             body, x, (stack, state[seg.name], pools[seg.name]))
     x = L.apply_norm(T._pick(params, None, "final_norm"), x)
+    # each row's last VALID position (prefill chunks are padded)
+    x_last = last_valid(x, length)
     w_head = T.lm_head_weight(cfg, pair)
-    logits = jnp.einsum("bd,dv->bv", x[:, -1], w_head,
+    logits = jnp.einsum("bd,dv->bv", x_last, w_head,
                         preferred_element_type=jnp.float32)
     return logits, new_state, new_pools
 

@@ -391,15 +391,23 @@ def _serve_positions(cfg, start, s):
     return pos
 
 
-def chunk_ring_attention(p, cfg, x, start, active, cache, *, window: int):
+def chunk_ring_attention(p, cfg, x, start, active, cache, *, window: int,
+                         length=None):
     """Sliding-window attention for a chunk of s tokens per batch row.
 
     cache: {"k","v": [B, W, H, D]} ring buffers (position p at slot p % W).
     `start` [B] = tokens already cached per row; rows with active=False get
     their cache returned unchanged (the caller row-selects, but the write
-    here must still be computed — shapes are fixed).
+    here must still be computed — shapes are fixed). `length` [B] = valid
+    tokens per row (None = all s): rows are padded to a fixed chunk shape
+    so the final partial prefill chunk does not retrace, and the writes of
+    padded positions MUST be dropped — a ring slot written at a padded
+    position would masquerade as an earlier (mod-W-aliased) position on the
+    next read.
     """
     b, s, _ = x.shape
+    if length is None:
+        length = jnp.full((b,), s, jnp.int32)
     w_cap = cache["k"].shape[1]
     q, k, v = _qkv(p, cfg, x, _serve_positions(cfg, start, s))
 
@@ -421,11 +429,13 @@ def chunk_ring_attention(p, cfg, x, start, active, cache, *, window: int):
     mask = jnp.concatenate([ring_mask, chunk_mask], axis=2)
     out = _grouped_scores(q, k_cat, v_cat, mask, cfg)
 
-    # write the chunk into the ring: position p -> slot p % W; when s > W
-    # only the last W chunk rows survive, so earlier rows are dropped via an
-    # out-of-bounds slot (duplicate in-bounds scatters have no defined order)
-    slot = jnp.where((j[None, :] >= s - w_cap) & active[:, None],
-                     jnp.mod(qpos, w_cap), w_cap)            # [B, S]
+    # write the chunk into the ring: position p -> slot p % W; among the
+    # valid (non-padded) rows only the last W survive, so earlier rows are
+    # dropped via an out-of-bounds slot (duplicate in-bounds scatters have
+    # no defined order); padded rows (j >= length) never write
+    keep = (j[None, :] < length[:, None]) & \
+        (j[None, :] >= length[:, None] - w_cap) & active[:, None]
+    slot = jnp.where(keep, jnp.mod(qpos, w_cap), w_cap)      # [B, S]
     rows = jnp.broadcast_to(jnp.arange(b)[:, None], (b, s))
     k_cache = cache["k"].at[rows, slot].set(
         k.astype(cache["k"].dtype), mode="drop")
@@ -435,16 +445,20 @@ def chunk_ring_attention(p, cfg, x, start, active, cache, *, window: int):
 
 
 def chunk_paged_attention(p, cfg, x, start, active, pool, page_table, *,
-                          page_size: int):
+                          page_size: int, length=None):
     """Full (window-free) attention for a chunk of s tokens per batch row,
     reading and writing K/V through per-row page tables.
 
     pool: {"k","v": [R, H, D]} physical token rows shared by ALL batch rows
     (R = num_pages * page_size); page_table: [B, MP] int32 physical page per
-    logical page, -1 where unallocated. Writes of inactive rows (and rows
-    whose page is unallocated) are dropped via out-of-bounds indices.
+    logical page, -1 where unallocated. Writes of inactive rows, rows
+    whose page is unallocated, and padded rows (`length` [B] = valid tokens
+    per row, None = all s) are dropped via out-of-bounds indices — padded
+    garbage must never land in a page a later request could share.
     """
     b, s, _ = x.shape
+    if length is None:
+        length = jnp.full((b,), s, jnp.int32)
     ps = page_size
     r_rows = pool["k"].shape[0]
     mp = page_table.shape[1]
@@ -473,7 +487,8 @@ def chunk_paged_attention(p, cfg, x, start, active, pool, page_table, *,
     # pages / inactive rows land out of bounds and are dropped
     wpos = start[:, None] + j[None, :]                       # [B, S]
     pid = jnp.take_along_axis(page_table, wpos // ps, axis=1)
-    dest = jnp.where((pid >= 0) & active[:, None],
+    dest = jnp.where((pid >= 0) & active[:, None] &
+                     (j[None, :] < length[:, None]),
                      pid * ps + wpos % ps, r_rows).reshape(-1)
     k_pool = pool["k"].at[dest].set(
         k.reshape(b * s, *k.shape[2:]).astype(pool["k"].dtype), mode="drop")

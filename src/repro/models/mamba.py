@@ -103,9 +103,16 @@ def selective_scan(a, dt, xc, b_ssm, c, h0):
     return y, h_last
 
 
-def apply_mamba(p, cfg, x, sel=None, cache=None):
+def apply_mamba(p, cfg, x, sel=None, cache=None, length=None):
     """x: [B, S, d]. cache (decode): {"h": [B,D,N], "conv": [B, K-1, D]}.
-    Returns (out, new_cache|None)."""
+    Returns (out, new_cache|None).
+
+    length [B] (cached chunk path only, None = all s): valid tokens per
+    row. Padded rows must not advance the recurrent state — their dt is
+    forced to 0 (exp(0·A)=1, zero input: an identity transition), and the
+    conv history tail is gathered at the per-row valid end rather than the
+    chunk end — so `h`/`conv` come back exactly as after the valid prefix.
+    """
     b, s, d = x.shape
     di = d_inner(cfg)
     ns = cfg.ssm.d_state
@@ -127,16 +134,28 @@ def apply_mamba(p, cfg, x, sel=None, cache=None):
         new_conv = hist[:, 1:]
     else:
         # chunked prefill: conv over [history ++ chunk], keeping the chunk's
-        # outputs (each has its full K-1 causal history) and the new tail
+        # outputs (each has its full K-1 causal history) and the new tail —
+        # the last K-1 VALID inputs, i.e. hist rows [length, length + K-1)
+        # (hist row i holds input i - (K-1) of the chunk)
         hist = jnp.concatenate([cache["conv"], x_in], axis=1)  # [B, K-1+S, D]
         full = _causal_depthwise_conv(hist, p["conv_w"], p["conv_b"])
         x_c = jax.nn.silu(full[:, cache["conv"].shape[1]:])
-        new_conv = hist[:, -cache["conv"].shape[1]:]
+        n_hist = cache["conv"].shape[1]
+        if length is None:
+            new_conv = hist[:, -n_hist:]
+        else:
+            tail = length[:, None] + jnp.arange(n_hist)[None, :]   # [B, K-1]
+            new_conv = jnp.take_along_axis(hist, tail[:, :, None], axis=1)
 
     dbl = smm(x_c, p["x_proj"], sel, "x_proj")
     dt, b_ssm, c_ssm = jnp.split(dbl, [dr, dr + ns], axis=-1)
     dt = jax.nn.softplus(dt.astype(jnp.float32) @ p["dt_proj"].astype(jnp.float32)
                          + p["dt_bias"])                      # [B,S,D] fp32
+    if length is not None and s > 1:
+        # padded rows: dt=0 makes the discretized step an identity (dA=1,
+        # dBx=0), freezing h at its value after the valid prefix
+        dt = jnp.where(jnp.arange(s)[None, :, None] < length[:, None, None],
+                       dt, 0.0)
     a = -jnp.exp(p["A_log"])                                   # [D,N]
     xc32 = x_c.astype(jnp.float32)
     b32 = b_ssm.astype(jnp.float32)

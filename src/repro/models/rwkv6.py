@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.sparse_update import smm
-from repro.models.common import dense_init
+from repro.models.common import dense_init, last_valid
 from repro.models.layers import apply_norm, init_norm
 
 CHUNK = 32
@@ -95,8 +95,14 @@ def wkv(r, k, v, w, u, s0):
     return ys.swapaxes(0, 1).reshape(b, s, h, d), s_last
 
 
-def apply_time_mix(p, cfg, x, sel=None, cache=None):
-    """x: [B,S,d]. cache (decode): {"s": [B,H,D,D], "last": [B,d]}."""
+def apply_time_mix(p, cfg, x, sel=None, cache=None, length=None):
+    """x: [B,S,d]. cache (decode): {"s": [B,H,D,D], "last": [B,d]}.
+
+    length [B] (cached path, None = all s): valid tokens per row. Padded
+    rows must not advance the wkv state — their decay is forced to 1 and
+    their key to 0 (S_t = 1·S + 0), and the token-shift "last" is taken at
+    the per-row valid end, so the cache comes back exactly as after the
+    valid prefix."""
     b, s, d = x.shape
     hd = cfg.rwkv.head_dim
     h = num_heads(cfg)
@@ -115,6 +121,10 @@ def apply_time_mix(p, cfg, x, sel=None, cache=None):
     w = jnp.exp(-jnp.exp(wlog)).reshape(b, s, h, hd)          # decay in (0,1)
 
     r32, k32, v32 = (t.astype(jnp.float32) for t in (r, k, v))
+    if length is not None and s > 1:
+        valid = (jnp.arange(s)[None, :] < length[:, None])[:, :, None, None]
+        k32 = jnp.where(valid, k32, 0.0)      # kv outer product vanishes
+        w = jnp.where(valid, w, 1.0)          # identity decay: S frozen
     s0 = cache["s"] if cache is not None else jnp.zeros((b, h, hd, hd), jnp.float32)
     if s == 1:  # decode fast path
         s_new, y = _wkv_chunk(p["u"], s0, (r32, k32, v32, w))
@@ -124,7 +134,8 @@ def apply_time_mix(p, cfg, x, sel=None, cache=None):
     y = apply_norm(p["ln_x"], y.reshape(b, s, d).astype(x.dtype))
     y = y * jax.nn.silu(g)
     out = smm(y, p["wo"], sel, "wo")
-    new_cache = None if cache is None else {"s": s_new, "last": x[:, -1]}
+    new_cache = None if cache is None else {"s": s_new,
+                                            "last": last_valid(x, length)}
     return out, new_cache
 
 
@@ -139,7 +150,7 @@ def init_channel_mix(key, cfg, dtype):
     }
 
 
-def apply_channel_mix(p, cfg, x, sel=None, cache=None):
+def apply_channel_mix(p, cfg, x, sel=None, cache=None, length=None):
     b, s, d = x.shape
     last = cache["last"] if cache is not None else None
     xp = _shift(x, last)
@@ -150,7 +161,7 @@ def apply_channel_mix(p, cfg, x, sel=None, cache=None):
     k = k * k
     kv = smm(k, p["wv"], sel, "wv")
     out = jax.nn.sigmoid(smm(xr, p["wr"], sel, "wr")) * kv
-    new_cache = None if cache is None else {"last": x[:, -1]}
+    new_cache = None if cache is None else {"last": last_valid(x, length)}
     return out, new_cache
 
 

@@ -140,7 +140,13 @@ def apply_updates_mixed(oc: OptimizerConfig, params, grads, compact_grads,
     grads: full-structure dense grads (zero at selectable leaves, from the
     stop-gradient in the compact train step — never read there, so XLA DCEs
     the zeros). compact_grads: {segment: nested {leaf: compact dW}} matching
-    `sel_idx`/`spec_tree`. Returns (new_params, new_state)."""
+    `sel_idx`/`spec_tree`. Returns (new_params, new_state).
+
+    Stacked expert leaves ([K, E, d, N] with [K, E, d, n_shards, n_sel,
+    block] compact grads, the MoE path) take the same rule: the gather/
+    scatter helpers and the fused Pallas kernel treat the extra lead dims
+    as rows, so the expert leaf stays one fused launch under
+    `use_kernels`."""
     lr = learning_rate(oc, step)
     t = jnp.asarray(step, jnp.float32) + 1.0
     # joint clip: compact leaves hold exactly the nonzero content of their

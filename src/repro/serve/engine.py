@@ -111,6 +111,7 @@ class ServeEngine:
         self.eos_id = eos_id
         self._key = jax.random.PRNGKey(seed)
         self._zero_key = jax.random.PRNGKey(0)
+        self._decode_length = jnp.ones((num_slots,), jnp.int32)
 
         ps = page_size
         self._step = jax.jit(
@@ -135,20 +136,32 @@ class ServeEngine:
         return self._zero_key if self.temperature <= 0.0 else self._next_key()
 
     def _chunk_batch(self, req: Request, start: int, size: int):
+        """Prefill chunk, always padded to one fixed page-sized shape: the
+        final partial chunk would otherwise retrace `paged_step` for every
+        distinct prompt-length residue. `length` masks the padding inside
+        the step (writes dropped, state frozen, logits at length-1)."""
+        ps = self.page_size
         batch = {"start": jnp.asarray([start], jnp.int32),
-                 "active": jnp.asarray([True])}
+                 "active": jnp.asarray([True]),
+                 "length": jnp.asarray([size], jnp.int32)}
         if self.cfg.embed_inputs:
-            batch["embeds"] = jnp.asarray(req.embeds[start:start + size])[None]
+            emb = np.asarray(req.embeds[start:start + size])
+            if size < ps:
+                emb = np.pad(emb, ((0, ps - size), (0, 0)))
+            batch["embeds"] = jnp.asarray(emb)[None]
         else:
-            batch["tokens"] = jnp.asarray(
-                req.tokens[start:start + size], jnp.int32)[None]
+            toks = np.asarray(req.tokens[start:start + size], np.int32)
+            if size < ps:
+                toks = np.pad(toks, (0, ps - size))
+            batch["tokens"] = jnp.asarray(toks)[None]
         return batch
 
     def _decode_batch(self, tokens_row, pos_row, active_row=None):
         if active_row is None:
             active_row = [True] * self.num_slots
         batch = {"start": jnp.asarray(pos_row, jnp.int32),
-                 "active": jnp.asarray(active_row)}
+                 "active": jnp.asarray(active_row),
+                 "length": self._decode_length}
         if self.cfg.embed_inputs:
             # placeholder frontend: fresh embeds each step (fresh key per
             # step — a reused key would feed identical inputs every step)

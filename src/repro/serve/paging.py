@@ -28,6 +28,13 @@ makes the cached K/V (RoPE'd at absolute positions) reusable. A single
 partial-page continuation per chain key is also cached (content-compared on
 lookup) so prompts that agree beyond the last full page boundary share it —
 that is the page the next appender COW-splits.
+
+Exact-page-multiple edge (fill == 0): such prompts have no partial page to
+register, so `match` instead downgrades their cached LAST full page to a
+partial (ps-1) match when the >= 1-uncached-token cap — not a hash miss —
+stopped the full-page loop. Reading a prefix of a cached page is sound
+because pages are absolute-position-addressed; the adopter's first write
+into it COW-splits as usual.
 """
 from __future__ import annotations
 
@@ -170,6 +177,7 @@ class PrefixCache:
             pages.append((pid, ps))
             covered += ps
         part = self._partial.get(chain)
+        matched_partial = False
         if part is not None:
             pid, fill, blob = part
             if 0 < fill <= max_tokens - covered and \
@@ -179,6 +187,25 @@ class PrefixCache:
                 self.pool.incref(pid)
                 pages.append((pid, fill))
                 covered += fill
+                matched_partial = True
+        if not matched_partial and covered + ps == len(tokens) \
+                and covered < max_tokens:
+            # exact-page-multiple edge: the prompt's LAST page is cached as
+            # a full page (its registrant had fill == 0, so no partial entry
+            # exists), but the full-page loop above stopped at the >= 1
+            # uncached-token cap. Attach that full page as a partial match
+            # of its first max_tokens - covered (= ps - 1) rows — absolute
+            # positions make the prefix of a cached page freely readable —
+            # instead of recomputing a page the cache already holds. Only a
+            # complete ps-token slice is ever hashed (hash-only trust, like
+            # the loop above).
+            nxt = _page_hash(tokens[covered:covered + ps], chain)
+            pid = self._full.get(nxt)
+            if pid is not None:
+                self._full.move_to_end(nxt)
+                self.pool.incref(pid)
+                pages.append((pid, max_tokens - covered))
+                covered = max_tokens
         self.hit_tokens += covered
         return pages, covered
 

@@ -227,15 +227,19 @@ def test_compact_state_checkpoint_roundtrip(tmp_path):
 # MoE batched (expert) compact backward: parity vs dense per-expert einsum
 # ---------------------------------------------------------------------------
 
+@pytest.mark.parametrize("kernels", [False, True], ids=["jnp", "kernels"])
 @pytest.mark.parametrize("n_experts", [2, 4])
 @pytest.mark.parametrize("n_sel", [1, 3])
-def test_smm_batched_compact_matches_per_expert_dense(n_experts, n_sel):
-    """`_smm_batched_compact` (jnp einsum backward, the MoE expert path) must
-    emit per-expert compact dW identical to the dense per-expert einsum
-    gathered at the selection — including odd n_sel — with zero cotangent on
-    the (gradient-stopped) full weight. This is the oracle the future Pallas
-    batched-dW kernel (ROADMAP Kernels open item) will be verified against."""
-    from repro.core.sparse_update import SelSpec, _smm_batched_compact
+def test_smm_batched_compact_matches_per_expert_dense(n_experts, n_sel,
+                                                      kernels):
+    """`_smm_batched_compact` (the MoE expert path) must emit per-expert
+    compact dW identical to the dense per-expert einsum gathered at the
+    selection — including odd n_sel — with zero cotangent on the
+    (gradient-stopped) full weight. Under `use_kernels` the backward is the
+    single-launch Pallas `batched_dw` kernel and must stay allclose (1e-6)
+    to the same oracle."""
+    from repro.core.sparse_update import (SelSpec, _smm_batched_compact,
+                                          use_kernels)
     spec = SelSpec(block=8, n_shards=2, n_sel=n_sel, n_blocks=4)
     e, c, k = n_experts, 12, 16
     n = spec.n_shards * spec.n_blocks * spec.block
@@ -257,7 +261,8 @@ def test_smm_batched_compact_matches_per_expert_dense(n_experts, n_sel):
     def loss(x, w, w_sel):
         return jnp.vdot(_smm_batched_compact(x, w, w_sel, idx, spec), cot)
 
-    dx, dw, dw_sel = jax.grad(loss, argnums=(0, 1, 2))(x, w, w_sel)
+    with use_kernels(kernels):
+        dx, dw, dw_sel = jax.grad(loss, argnums=(0, 1, 2))(x, w, w_sel)
     assert np.all(np.asarray(dw) == 0.0)      # full weight: gradient stopped
 
     for ei in range(e):                       # dense per-expert oracle
@@ -266,7 +271,74 @@ def test_smm_batched_compact_matches_per_expert_dense(n_experts, n_sel):
         dwb = dw_dense.reshape(k, spec.n_shards, spec.n_blocks, spec.block)
         expect = jnp.take_along_axis(dwb, idx[None, :, :, None], axis=2)
         np.testing.assert_allclose(np.asarray(dw_sel[ei]),
-                                   np.asarray(expect), rtol=1e-5, atol=1e-5)
+                                   np.asarray(expect), rtol=1e-6, atol=1e-6)
     np.testing.assert_allclose(
         np.asarray(dx), np.asarray(jnp.einsum("ecn,ekn->eck", cot, w)),
         rtol=1e-5, atol=1e-5)
+
+
+def _moe_tc(n_experts: int, k_layers: int, num_layers: int = 5):
+    import dataclasses
+    cfg0 = get_smoke_config("deepseek-moe-16b")
+    cfg = dataclasses.replace(
+        cfg0, num_layers=num_layers,
+        moe=dataclasses.replace(cfg0.moe, num_experts=n_experts, top_k=2))
+    return TrainConfig(
+        model=cfg, shape=ShapeConfig("t", 16, 4, "train"),
+        sparse=SparseUpdateConfig(update_ratio=0.5,
+                                  num_update_layers=k_layers,
+                                  channel_block=8),
+        optimizer=OptimizerConfig(kind="momentum", momentum=0.9,
+                                  learning_rate=0.05))
+
+
+def test_moe_compact_with_pallas_kernels():
+    """The MoE arch under use_kernels: the expert leaves' backward runs the
+    batched-dW kernel and the fused optimizer updates the stacked expert
+    leaf — params AND optimizer state stay allclose to the jnp compact
+    path."""
+    from repro.core.sparse_update import use_kernels
+    tc = _moe_tc(n_experts=4, k_layers=2, num_layers=3)
+    state, plan = make_train_state(tc, jax.random.PRNGKey(0))
+    batch = _batch(tc.model)
+    step = make_train_step(tc, plan, compact_grads=True)
+    s_jnp, m_jnp = step(state, batch)
+    with use_kernels(True):
+        s_k, m_k = step(state, batch)
+    assert float(m_jnp["loss"]) == pytest.approx(float(m_k["loss"]), abs=1e-5)
+    assert _max_diff(s_jnp["params_trainable"],
+                     s_k["params_trainable"]) <= 1e-5
+    if s_jnp["opt"]:
+        assert _max_diff(s_jnp["opt"], s_k["opt"]) <= 1e-5
+
+
+def test_moe_compact_kernel_launch_count():
+    """The MoE acceptance check: the lowered compact train step has a
+    CONSTANT number of Pallas launch sites per expert-sharded leaf — one
+    batched dW in the backward scan plus one fused optimizer — asserted
+    EQUAL across (n_experts, K) in {(2, 1), (4, 3)} (num_layers is held at
+    5 so both K values stay inside the same MoE segment and the selectable
+    leaf set is identical)."""
+    from repro.core.sparse_update import use_kernels
+    from repro.launch.hlo_analysis import (kernel_launch_breakdown,
+                                           kernel_launch_count)
+    counts, leaves, breakdowns = {}, {}, {}
+    for n_experts, k_layers in ((2, 1), (4, 3)):
+        tc = _moe_tc(n_experts, k_layers)
+        state, plan = make_train_state(tc, jax.random.PRNGKey(0))
+        step = make_train_step(tc, plan, compact_grads=True)
+        with use_kernels(True):
+            jaxpr = jax.make_jaxpr(step)(state, _batch(tc.model))
+        key = (n_experts, k_layers)
+        counts[key] = kernel_launch_count(jaxpr)
+        leaves[key] = len(_selectable_leaves(plan))
+        breakdowns[key] = kernel_launch_breakdown(jaxpr)
+    (k1, k2) = counts
+    assert counts[k1] == counts[k2], counts
+    assert leaves[k1] == leaves[k2], leaves
+    assert counts[k2] == 2 * leaves[k2], (counts, leaves)
+    # per-kernel budget: exactly one batched-dW site per expert leaf
+    # (w_gate/w_up/w_down), independent of n_experts and K
+    for key, bd in breakdowns.items():
+        assert bd.get("batched_dw._kernel", 0) == 3, (key, bd)
+    assert breakdowns[k1] == breakdowns[k2], breakdowns

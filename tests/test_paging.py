@@ -168,6 +168,115 @@ def test_prefix_cache_eviction_respects_pins():
     assert pool.free_pages == 4
 
 
+def test_exact_multiple_registers_no_partial():
+    """fill == 0 edge: a prompt whose length is an exact page multiple has
+    no partially-filled last page — register_partial must refuse, take no
+    pool reference, and leave the partial table empty."""
+    pool = PagePool(4, PS)
+    cache = PrefixCache(pool)
+    toks = np.arange(2 * PS, dtype=np.int32)
+    pids = [pool.alloc(), pool.alloc()]
+    cache.register_full(toks, 2, pids, 0)
+    refs_before = pool.ref.copy()
+    assert cache.register_partial(toks, pids[-1]) is False
+    assert (pool.ref == refs_before).all()
+    assert len(cache._partial) == 0
+    for pid in pids:
+        pool.decref(pid)
+    while cache.evict_one():
+        pass
+    pool.check()
+    assert pool.free_pages == 4
+
+
+def test_exact_multiple_match_downgrades_last_full_page():
+    """fill == 0 edge, match side: an identical exact-multiple prompt must
+    reuse the registrant's LAST full page as a ps-1 partial match (the
+    >= 1-uncached-token cap blocks a full match), while a prompt whose last
+    page differs must not."""
+    pool = PagePool(6, PS)
+    cache = PrefixCache(pool)
+    toks = np.asarray(range(2 * PS), np.int32)
+    pids = [pool.alloc(), pool.alloc()]
+    cache.register_full(toks, 2, pids, 0)
+
+    pages, covered = cache.match(toks, len(toks) - 1)
+    assert covered == 2 * PS - 1
+    assert [f for _, f in pages] == [PS, PS - 1]
+    assert pages[-1][0] == pids[-1]
+    assert pool.ref[pids[-1]] == 3          # holder + cache + this match
+    cache.abandon(pages, len(toks))
+
+    # the downgrade is hash-gated on the full last page's content
+    diff = toks.copy()
+    diff[-1] += 1
+    pages, covered = cache.match(diff, len(diff) - 1)
+    assert covered == PS and [f for _, f in pages] == [PS]
+    for pid, _ in pages:
+        pool.decref(pid)
+
+    # a LONGER prompt sharing the pages must still full-match both (the
+    # downgrade only fires when the cap — not a miss — stopped the loop)
+    longer = np.concatenate([toks, np.asarray([7, 8], np.int32)])
+    pages, covered = cache.match(longer, len(longer) - 1)
+    assert covered == 2 * PS and [f for _, f in pages] == [PS, PS]
+    for pid, _ in pages:
+        pool.decref(pid)
+    for pid in pids:
+        pool.decref(pid)
+    while cache.evict_one():
+        pass
+    pool.check()
+    assert pool.free_pages == 6
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2 ** 31 - 1),
+    n_pages_len=st.integers(1, 3),
+)
+def test_exact_multiple_roundtrip_property(seed, n_pages_len):
+    """Register/match round trip pinned AT the exact-multiple lengths:
+    matched pages always hold exactly the claimed token content, refcounts
+    balance, and draining the cache frees every page."""
+    rng = np.random.default_rng(seed)
+    pool = PagePool(32, PS)
+    cache = PrefixCache(pool)
+    content = {}
+    toks = rng.integers(0, 3, n_pages_len * PS).astype(np.int32)
+    for attempt in range(3):                 # same prompt resubmitted
+        pages, covered = cache.match(toks, len(toks) - 1)
+        assert covered <= len(toks) - 1
+        off = 0
+        for pid, fill in pages:
+            assert content[pid][:fill * 4] == np.ascontiguousarray(
+                toks[off:off + fill]).tobytes()[:fill * 4]
+            off += fill
+        held = [pid for pid, _ in pages]
+        n_full = sum(1 for _, f in pages if f == PS)
+        if pages and pages[-1][1] < PS:      # write boundary: COW first
+            new = pool.cow_split(pages[-1][0])
+            content[new] = content[held[-1]]
+            held[-1] = new
+        while len(held) < n_pages_len:
+            pid = pool.alloc()
+            lo = len(held) * PS
+            content[pid] = np.ascontiguousarray(toks[lo:lo + PS]).tobytes()
+            held.append(pid)
+        reg = cache.register_full(toks, n_pages_len, held, n_full)
+        assert reg == n_pages_len
+        assert cache.register_partial(toks, held[-1]) is False   # fill == 0
+        pool.check()
+        if attempt > 0:                      # resubmits must hit the cache
+            assert covered > 0
+        for pid in held:
+            pool.decref(pid)
+        pool.check()
+    while cache.evict_one():
+        pool.check()
+    assert pool.free_pages == pool.num_pages
+
+
 def test_prefix_match_is_content_checked():
     """A partial-page entry only matches identical token content."""
     pool = PagePool(4, PS)

@@ -109,6 +109,53 @@ def test_paged_parity_midstream_cancellation(arch):
     assert stats.requests_cancelled == 1 and stats.tokens_cancelled == cut
 
 
+def test_chunked_prefill_single_trace():
+    """Trace-count regression: the final partial prefill chunk is padded to
+    page_size under the per-row length mask, so prompts of length ps-3,
+    ps-2, ps-1 must compile `paged_step` ONCE for prefill (plus once for
+    the decode shape) — not once per distinct residue."""
+    cfg, engine = _engine("llama3-8b", num_slots=2,
+                          max_len=2 * PAGE + GEN_LEN, page_size=PAGE)
+    rng = np.random.default_rng(0)
+    lens = [PAGE - 3, PAGE - 2, PAGE - 1]
+    assert all(p >= 1 for p in lens)
+    reqs = [Request(i, 3, tokens=rng.integers(
+                0, cfg.vocab_size, plen).astype(np.int32))
+            for i, plen in enumerate(lens)]
+    stats = engine.run(reqs)
+    assert stats.requests_completed == 3
+    # one prefill trace (B=1, S=PAGE) + one decode trace (B=slots, S=1)
+    assert engine._step._cache_size() == 2, engine._step._cache_size()
+
+
+def test_exact_page_multiple_prompts_share_last_page():
+    """The fill==0 prefix-cache edge, end to end: identical prompts whose
+    length is an EXACT page multiple register no partial entry, yet later
+    admissions must still reuse the registrant's last full page as a ps-1
+    partial match (reading a prefix of a cached page is position-safe) —
+    with output tokens identical to the no-sharing run."""
+    cfg = get_smoke_config("llama3-8b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    plen, gen = 2 * PAGE, 4
+    toks = np.random.default_rng(23).integers(
+        0, cfg.vocab_size, plen).astype(np.int32)
+
+    def run(sharing):
+        engine = ServeEngine(cfg, params, num_slots=2, max_len=plen + gen,
+                             page_size=PAGE, prefix_sharing=sharing)
+        return engine.run([Request(i, gen, tokens=toks.copy())
+                           for i in range(3)])
+
+    shared, plain = run(True), run(False)
+    assert shared.prefix_hit_tokens > PAGE, (
+        "repeat exact-multiple prompts matched only whole pages — the "
+        "cached last page was recomputed")
+    assert shared.prefill_chunks < plain.prefill_chunks
+    assert shared.cow_splits >= 1          # write into the shared last page
+    for rid in shared.results:
+        assert shared.results[rid].tokens == plain.results[rid].tokens
+
+
 # ---------------------------------------------------------------------------
 # accounting: padded/free slots and cancelled requests must never count
 # ---------------------------------------------------------------------------
