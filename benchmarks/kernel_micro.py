@@ -7,7 +7,10 @@ dense-scatter vs compact-gradient train-step comparison (step time and
 compiler-reported peak temp memory).
 
 Besides the CSV rows, `run()` fills the module-level RECORDS list with
-machine-readable dicts (op, variant, shape, ratio, us, launches);
+machine-readable dicts (op, variant, shape, ratio, us, launches); kernel
+records additionally carry roofline context from `benchmarks.roofline`
+(flops, bytes, arith_intensity, bound) so each BENCH_kernels.json row shows
+which side of the TPU ridge point the op sits on next to its launch count.
 `benchmarks.run` dumps them to BENCH_kernels.json so the perf trajectory is
 tracked across PRs."""
 from __future__ import annotations
@@ -25,6 +28,8 @@ from repro.kernels.masked_dw import (block_sparse_dw_kernel,
                                      block_sparse_dw_pipelined_kernel)
 from repro.kernels.scatter_blocks import block_scatter_update_kernel
 from repro.launch.hlo_analysis import kernel_launch_count
+
+from benchmarks.roofline import kernel_roofline
 
 RECORDS: list[dict] = []      # machine-readable output (BENCH_kernels.json)
 BENCH_JSON = "BENCH_kernels.json"
@@ -57,9 +62,12 @@ def run() -> list[tuple]:
         flops_skip = 1.0 - n_sel / (n // block)
         rows.append((f"kernel/masked_dw_r{ratio}", t_ref,
                      f"jnp_oracle;compute_skipped={flops_skip:.0%}"))
+        sel = n_sel * block
         RECORDS.append({"op": "masked_dw", "variant": "jnp_oracle",
                         "shape": f"m{m}k{k}n{n}b{block}", "ratio": ratio,
-                        "us": t_ref, "launches": 0})
+                        "us": t_ref, "launches": 0,
+                        **kernel_roofline(2.0 * m * k * sel,
+                                          4.0 * (m * k + m * sel + k * sel))})
     # dense dW for comparison
     jd = jax.jit(lambda x, dy: jnp.einsum("mk,mn->kn", x, dy))
     rows.append(("kernel/dense_dw", _time(jd, x, dy), "baseline"))
@@ -103,6 +111,9 @@ def batched_dw_comparison() -> list[tuple]:
         return jnp.stack(outs)
 
     shape = f"e{e}m{m}k{k}s{s}nb{nb}b{blk}"
+    sel = s * n_sel * blk
+    rl = kernel_roofline(2.0 * e * m * k * sel,
+                         4.0 * e * (m * k + m * sel + k * sel))
     for variant, fn in (("fused", dw_batched),
                         ("pipelined", dw_batched_pipelined),
                         ("per_expert_loop", dw_per_expert_loop)):
@@ -112,7 +123,8 @@ def batched_dw_comparison() -> list[tuple]:
                      f"launches={launches};eager_dispatch"))
         RECORDS.append({"op": "batched_dw", "variant": variant,
                         "shape": shape, "ratio": n_sel / nb, "us": us,
-                        "launches": launches, "timing": "eager_dispatch"})
+                        "launches": launches, "timing": "eager_dispatch",
+                        **rl})
 
     def dw_pipelined(x2, dy2, idx):
         return block_sparse_dw_pipelined_kernel(x2, dy2, idx, block=blk,
@@ -125,7 +137,9 @@ def batched_dw_comparison() -> list[tuple]:
     RECORDS.append({"op": "masked_dw", "variant": "pipelined",
                     "shape": f"m{m}k{k}s{s}nb{nb}b{blk}",
                     "ratio": n_sel / nb, "us": us, "launches": launches,
-                    "timing": "eager_dispatch"})
+                    "timing": "eager_dispatch",
+                    **kernel_roofline(2.0 * m * k * sel,
+                                      4.0 * (m * k + m * sel + k * sel))})
     return rows
 
 
@@ -163,6 +177,9 @@ def fusion_comparison() -> list[tuple]:
         return jnp.concatenate(outs, axis=1)
 
     shape = f"m{m}k{k}s{s}nb{nb}b{blk}"
+    sel = s * n_sel * blk
+    rl = kernel_roofline(2.0 * m * k * sel,
+                         4.0 * (m * k + m * sel + k * sel))
     for variant, fn in (("fused", dw_fused), ("per_shard_loop", dw_loop)):
         us = _time(fn, x, dy, idx, n=3)          # eager: dispatch per launch
         launches = _launches(fn, x, dy, idx)
@@ -170,7 +187,7 @@ def fusion_comparison() -> list[tuple]:
                      f"launches={launches};eager_dispatch"))
         RECORDS.append({"op": "masked_dw", "variant": variant, "shape": shape,
                         "ratio": n_sel / nb, "us": us, "launches": launches,
-                        "timing": "eager_dispatch"})
+                        "timing": "eager_dispatch", **rl})
 
     k_steps, r = 3, 64
     w = jnp.asarray(rng.normal(size=(k_steps, r, n)), jnp.float32)
@@ -194,6 +211,8 @@ def fusion_comparison() -> list[tuple]:
         return jnp.concatenate(outs, axis=0)
 
     shape = f"K{k_steps}r{r}s{s}nb{nb}b{blk}"
+    elems = k_steps * r * s * n_sel * blk        # touched weight elements
+    rl = kernel_roofline(1.0 * elems, 4.0 * 3 * elems)
     for variant, fn in (("fused", sc_fused), ("per_k_shard_loop", sc_loop)):
         us = _time(fn, w, upd, idx2, n=3)        # eager: dispatch per launch
         launches = _launches(fn, w, upd, idx2)
@@ -201,7 +220,8 @@ def fusion_comparison() -> list[tuple]:
                      f"launches={launches};eager_dispatch"))
         RECORDS.append({"op": "block_scatter_update", "variant": variant,
                         "shape": shape, "ratio": n_sel / nb, "us": us,
-                        "launches": launches, "timing": "eager_dispatch"})
+                        "launches": launches, "timing": "eager_dispatch",
+                        **rl})
 
     # fused optimizer: one in-place launch vs jnp gather -> rule -> scatter
     from functools import partial
@@ -217,6 +237,7 @@ def fusion_comparison() -> list[tuple]:
 
     opt_jnp = jax.jit(partial(ref.fused_block_opt_ref, kind="momentum",
                               momentum=0.9))
+    rl = kernel_roofline(4.0 * elems, 4.0 * 5 * elems)  # mu+w rmw per elem
     for variant, fn, jfn in (("fused", opt_fused, jax.jit(opt_fused)),
                              ("gather_jnp_scatter", None, opt_jnp)):
         us = _time(jfn, w, g, idx2, lr, t, mu)
@@ -225,7 +246,7 @@ def fusion_comparison() -> list[tuple]:
                      f"launches={launches}"))
         RECORDS.append({"op": "fused_block_opt", "variant": variant,
                         "shape": shape, "ratio": n_sel / nb, "us": us,
-                        "launches": launches, "timing": "jit"})
+                        "launches": launches, "timing": "jit", **rl})
     return rows
 
 

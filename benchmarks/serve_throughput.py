@@ -17,6 +17,13 @@ sharing shows up as hit rate > 0 and a LOWER page peak than
 `--arch all` sweeps the four cache families (dense KV, ring-buffer, rwkv
 state, hybrid mamba state).
 
+`--personalize-frac F` routes the first F fraction of requests through the
+per-user delta store (round-robin user ids; `--users 2` implied when unset)
+and reports the personalization overheads next to throughput: delta-store
+hit rate, resident delta bytes, and online-train-wave seconds per decoded
+token. Train-wave accounting is exact: one wave per COMPLETED personalized
+request (cancelled ones never train), asserted below.
+
 Warmup: one throwaway run triggers compilation so the timed run measures
 steady-state serving, not XLA.
 """
@@ -46,18 +53,38 @@ def _attach_cancels(requests, frac: float, gen_len: int):
     return n_cancel
 
 
+def _attach_users(requests, frac: float, num_users: int):
+    """First `frac` fraction of requests keep a round-robin user id; the
+    rest serve the plain base model (mixed personalized/plain batch)."""
+    n_pers = int(len(requests) * frac)
+    for i, req in enumerate(requests):
+        req.user = (i % num_users) if i < n_pers else None
+    return n_pers
+
+
 def bench_one(args, arch: str):
     ns = argparse.Namespace(**{**vars(args), "arch": arch})
+    if ns.personalize_frac > 0 and ns.users == 0:
+        ns.users = 2            # personalization needs a user universe
     cfg, engine = build_engine(ns)
     # warmup: compile the step shapes outside the timed run
     warm = argparse.Namespace(**{**vars(ns), "requests": min(2, ns.requests),
                                  "seed": ns.seed + 1})
     engine.run(build_requests(warm, cfg))
     requests = build_requests(ns, cfg)
+    if ns.personalize_frac > 0:
+        n_pers = _attach_users(requests, ns.personalize_frac, ns.users)
+    else:
+        n_pers = len(requests) if ns.users > 0 else 0
     n_cancel = _attach_cancels(requests, args.cancel_frac, args.gen_len)
     stats = engine.run(requests)
     assert stats.requests_completed == len(requests) - n_cancel, (
         "cancelled requests leaked into completed-request accounting")
+    if ns.users > 0:
+        # one online wave per COMPLETED personalized request, no more:
+        # cancels attach to the same request prefix as user ids
+        assert stats.train_waves == n_pers - min(n_cancel, n_pers), (
+            "train-wave count diverged from completed personalized requests")
     print(f"[{arch}] requests_completed={stats.requests_completed} "
           f"requests_cancelled={stats.requests_cancelled} "
           f"tokens_out={stats.tokens_out} "
@@ -72,6 +99,13 @@ def bench_one(args, arch: str):
           f"page_util={stats.page_util:.2f} "
           f"prefix_hit_rate={stats.prefix_hit_rate:.2f} "
           f"cow_splits={stats.cow_splits}")
+    if ns.users > 0:
+        print(f"[{arch}] personalize_frac={ns.personalize_frac} "
+              f"users={ns.users} train_waves={stats.train_waves} "
+              f"wave_ms_per_token={stats.wave_s_per_token * 1e3:.2f} "
+              f"delta_hit_rate={stats.delta_hit_rate:.2f} "
+              f"delta_resident_bytes={stats.delta_resident_bytes} "
+              f"delta_evictions={stats.delta_evictions}")
     return stats
 
 
@@ -80,6 +114,9 @@ def main(argv=None):
     ap.add_argument("--cancel-frac", type=float, default=0.0,
                     help="fraction of requests cancelled mid-stream via "
                          "their streaming callback")
+    ap.add_argument("--personalize-frac", type=float, default=0.0,
+                    help="fraction of requests carrying a user id (per-user "
+                         "delta decode + online train waves)")
     args = ap.parse_args(argv)
     archs = FAMILY_ARCHS if args.arch == "all" else (args.arch,)
     return {arch: bench_one(args, arch) for arch in archs}

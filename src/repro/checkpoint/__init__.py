@@ -1,3 +1,6 @@
-from repro.checkpoint.manager import CheckpointManager, save_pytree, load_pytree
+from repro.checkpoint.manager import (CheckpointManager, load_pytree,
+                                      restore_delta_store, save_delta_store,
+                                      save_pytree)
 
-__all__ = ["CheckpointManager", "save_pytree", "load_pytree"]
+__all__ = ["CheckpointManager", "save_pytree", "load_pytree",
+           "save_delta_store", "restore_delta_store"]

@@ -130,6 +130,33 @@ def _unflatten_strs(flat: dict[str, Any]):
     return root
 
 
+def save_delta_store(path: str, store, meta: Optional[dict] = None):
+    """Serialize a serve-engine per-user delta store (`repro.serve.deltas.
+    DeltaStore` holding `repro.core.delta.DeltaState` entries) into the
+    standard .ckpt format: one subtree per resident user, keyed by str(user),
+    with the user ids (LRU order, least recent first) recorded in
+    meta["delta_users"]. Duck-typed — `store` only needs `users()`/`peek()`
+    and entries a `to_tree()`, so this module stays serve-import-free."""
+    users = store.users()
+    tree = {str(u): store.peek(u).to_tree() for u in users}
+    meta = dict(meta or {})
+    meta["delta_users"] = [u if isinstance(u, (int, str)) else str(u)
+                           for u in users]
+    save_pytree(path, tree, meta)
+
+
+def restore_delta_store(path: str, store):
+    """Restore entries written by `save_delta_store` into `store` via its
+    `load()` (unpinned, LRU order preserved, capacity bound honored —
+    restoring more users than capacity evicts from the least-recent end).
+    Returns the checkpoint meta."""
+    from repro.core.delta import DeltaState
+    arrays, meta = load_pytree(path)
+    for user in meta.get("delta_users", sorted(arrays)):
+        store.load(user, DeltaState.from_tree(arrays[str(user)]))
+    return meta
+
+
 class CheckpointManager:
     """save-every-N, keep-last-K manager with atomic writes and
     latest-checkpoint discovery (restart/resume)."""

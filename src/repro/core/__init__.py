@@ -19,6 +19,11 @@ from repro.core.sparse_update import (SelSpec, smm, split_stack, merge_stack,
                                       use_kernels)
 
 _LAZY = {
+    "DeltaState": ("repro.core.delta", "DeltaState"),
+    "apply_delta_tree": ("repro.core.delta", "apply_delta_tree"),
+    "extract_delta_tree": ("repro.core.delta", "extract_delta_tree"),
+    "zeros_delta_tree": ("repro.core.delta", "zeros_delta_tree"),
+    "decode_delta_spec": ("repro.core.delta", "decode_delta_spec"),
     "SelectionPlan": ("repro.core.selection", "SelectionPlan"),
     "build_plan": ("repro.core.selection", "build_plan"),
     "random_selection": ("repro.core.selection", "random_selection"),

@@ -1,0 +1,161 @@
+"""First-class compact parameter deltas — the `[K, n_shards, n_sel, block]`
+representation that the compact-gradient train step used to hold only
+transiently, extracted into a shared abstraction consumed by BOTH halves of
+the system:
+
+- **train half**: an online train wave materializes `base + delta` for the
+  trainable suffix, runs the existing 2-launch compact train step, and
+  re-extracts the delta (`apply_delta_tree` / `extract_delta_tree`). The
+  base weights are never written — bitwise identical before and after.
+- **serve half**: decode applies the same delta as a *gather-add at matmul
+  time* (`repro.models.common.delta_matmul_add`): the per-user contribution
+  `x @ delta` lands only in the selected output-channel blocks, so no dense
+  per-user weight copy ever exists and user deltas ride the jitted
+  `paged_step` as batch-row data (no per-user retrace).
+
+Value dtype is float32 throughout: a delta is the exact difference of two
+param-dtype (bf16) tensors, which f32 represents exactly, so
+`scatter(gather(base) + delta)` reconstructs the trained weights bitwise.
+
+Shapes, per selectable leaf of a trainable segment stack `[K, *lead, N]`:
+
+    idx   [K, n_shards, n_sel]                   int32 block ids per shard
+    vals  [K, *lead, n_shards, n_sel, block]     f32 selected-block delta
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparse_update import (SelSpec, gather_param_blocks,
+                                      scatter_param_blocks)
+
+__all__ = [
+    "DeltaState", "DECODE_DELTA_PARENTS", "apply_delta_tree",
+    "decode_delta_spec", "extract_delta_tree", "zeros_delta_tree",
+]
+
+# sublayer dicts whose selectable matmuls the serve-time gather-add covers:
+# plain [B,S,d] x [d,N] projections of attention and dense MLP blocks.
+# Mixer-internal matmuls (mamba in_proj/out_proj, rwkv time/channel mix) and
+# expert-batched MoE weights keep delta=None on the decode path.
+DECODE_DELTA_PARENTS = {
+    "attn": ("wq", "wk", "wv", "wo"),
+    "mlp": ("w_gate", "w_up", "w_down"),
+}
+
+
+@dataclasses.dataclass
+class DeltaState:
+    """One user's compact parameter delta against a fixed base model.
+
+    `idx` / `vals` are per-segment trees mirroring the (pruned) selection
+    spec; leaves may be numpy (host-resident store entry) or jnp (device).
+    """
+    idx: dict           # seg -> nested {leaf: [K, n_shards, n_sel] int32}
+    vals: dict          # seg -> nested {leaf: [K, *lead, h, n_sel, block] f32}
+
+    @property
+    def nbytes(self) -> int:
+        return sum(int(a.nbytes) for a in
+                   jax.tree.leaves((self.idx, self.vals)))
+
+    def to_tree(self) -> dict:
+        """Checkpoint-friendly pytree (plain nested dicts, no None segs)."""
+        return {"idx": self.idx, "vals": self.vals}
+
+    @classmethod
+    def from_tree(cls, tree: dict) -> "DeltaState":
+        return cls(idx=tree["idx"], vals=tree["vals"])
+
+
+def _spec_leaves(spec_tree) -> list:
+    return jax.tree_util.tree_leaves(
+        spec_tree, is_leaf=lambda x: isinstance(x, SelSpec))
+
+
+def decode_delta_spec(plan, trainable_segments) -> dict:
+    """Prune `plan.spec` to the leaves the decode gather-add can apply:
+    2D-per-layer projections under an `attn`/`mlp` sublayer (see
+    DECODE_DELTA_PARENTS). Returns {seg: nested {leaf: SelSpec}} with empty
+    segments dropped."""
+    def walk(spec, stack, parent):
+        out = {}
+        for name, sub in spec.items():
+            if isinstance(sub, dict):
+                child = walk(sub, stack[name], name)
+                if child:
+                    out[name] = child
+            elif (name in DECODE_DELTA_PARENTS.get(parent, ())
+                  and stack[name].ndim == 3):
+                out[name] = sub
+        return out
+
+    out = {}
+    for seg, spec in plan.spec.items():
+        if not plan.seg_trainable.get(seg) or seg not in trainable_segments:
+            continue
+        pruned = walk(spec, trainable_segments[seg], "")
+        if pruned:
+            out[seg] = pruned
+    return out
+
+
+def zeros_delta_tree(trainable_segments, idx_tree, spec_tree, xp=np) -> dict:
+    """Zero-valued delta `vals` tree matching `spec_tree` (the shape
+    `gather_param_blocks` would produce). `xp` picks numpy (host store
+    entries) or jnp (device)."""
+    def walk(stack, idx, spec):
+        if isinstance(spec, SelSpec):
+            k = idx.shape[0]
+            lead = tuple(stack.shape[1:-1])
+            return xp.zeros((k,) + lead + (spec.n_shards, spec.n_sel,
+                                           spec.block), xp.float32)
+        return {name: walk(stack[name], idx[name], spec[name])
+                for name in spec}
+
+    return {seg: walk(trainable_segments[seg], idx_tree[seg], spec)
+            for seg, spec in spec_tree.items()}
+
+
+def apply_delta_tree(trainable_segments, vals_tree, idx_tree, spec_tree):
+    """Materialize `base + delta` for the trainable segments: overwrite each
+    selected block with `gather(base) + vals` (f32 add, cast back to the
+    param dtype). Non-selectable leaves and unselected blocks pass through
+    untouched; the base tree itself is never modified."""
+    def walk(stack, vals, idx, spec):
+        if isinstance(spec, SelSpec):
+            base = gather_param_blocks(stack, idx, spec).astype(jnp.float32)
+            return scatter_param_blocks(stack, base + vals, idx, spec)
+        return {name: (walk(sub, vals[name], idx[name], spec[name])
+                       if name in spec else sub)
+                for name, sub in stack.items()}
+
+    out = {}
+    for seg, stack in trainable_segments.items():
+        spec = spec_tree.get(seg)
+        if not spec or idx_tree.get(seg) is None or \
+                vals_tree.get(seg) is None:
+            out[seg] = stack
+        else:
+            out[seg] = walk(stack, vals_tree[seg], idx_tree[seg], spec)
+    return out
+
+
+def extract_delta_tree(base_segments, new_segments, idx_tree, spec_tree):
+    """Inverse of `apply_delta_tree` after training: the compact f32
+    difference `gather(new) - gather(base)` per selectable leaf."""
+    def walk(base, new, idx, spec):
+        if isinstance(spec, SelSpec):
+            return (gather_param_blocks(new, idx, spec).astype(jnp.float32)
+                    - gather_param_blocks(base, idx, spec).astype(jnp.float32))
+        return {name: walk(base[name], new[name], idx[name], spec[name])
+                for name in spec}
+
+    return {seg: walk(base_segments[seg], new_segments[seg],
+                      idx_tree[seg], spec)
+            for seg, spec in spec_tree.items()}

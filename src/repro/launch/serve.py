@@ -21,7 +21,7 @@ import jax
 
 from repro.configs import get_config, get_smoke_config
 from repro.models import transformer as T
-from repro.serve import ServeEngine
+from repro.serve import PersonalizationConfig, ServeEngine
 from repro.serve.engine import (make_random_requests,
                                 make_shared_prefix_requests)
 
@@ -30,12 +30,25 @@ def build_engine(args, cfg=None):
     cfg = cfg or (get_smoke_config(args.arch) if args.smoke
                   else get_config(args.arch))
     params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
+    p13n = None
+    if args.users > 0:
+        from repro.configs.base import OptimizerConfig, SparseUpdateConfig
+        p13n = PersonalizationConfig(
+            sparse=SparseUpdateConfig(
+                update_ratio=args.personalize_ratio,
+                num_update_layers=args.personalize_layers,
+                channel_block=8),
+            optimizer=OptimizerConfig(kind="sgd",
+                                      learning_rate=args.personalize_lr),
+            store_capacity=args.delta_capacity,
+            train_tokens=args.train_tokens, seed=args.seed)
     engine = ServeEngine(
         cfg, params, num_slots=args.batch,
         max_len=args.prompt_len + args.gen_len,
         temperature=args.temperature, eos_id=args.eos_id, seed=args.seed,
         page_size=args.page_size, num_pages=args.num_pages,
-        prefix_sharing=not args.no_prefix_sharing)
+        prefix_sharing=not args.no_prefix_sharing,
+        personalization=p13n)
     return cfg, engine
 
 
@@ -49,6 +62,8 @@ def build_requests(args, cfg):
                                     args.gen_len, seed=args.seed)
     for r in reqs:
         r.timeout_s = args.timeout_s
+        if args.users > 0:
+            r.user = r.rid % args.users  # round-robin user routing
         if args.stream:
             r.stream = lambda rid, tok: print(
                 f"[stream] rid={rid} token={tok}")
@@ -79,6 +94,20 @@ def add_serve_args(ap: argparse.ArgumentParser):
                     help="per-request wall-clock deadline")
     ap.add_argument("--stream", action="store_true",
                     help="print tokens as they are sampled")
+    ap.add_argument("--users", type=int, default=0,
+                    help="> 0: route requests round-robin across this many "
+                         "user ids and personalize per user (delta store + "
+                         "online train waves)")
+    ap.add_argument("--personalize-lr", type=float, default=0.05,
+                    help="online train-wave sgd learning rate")
+    ap.add_argument("--personalize-layers", type=int, default=2,
+                    help="trainable layer suffix K for per-user deltas")
+    ap.add_argument("--personalize-ratio", type=float, default=0.25,
+                    help="channel update ratio for per-user deltas")
+    ap.add_argument("--train-tokens", type=int, default=16,
+                    help="tokens per online train wave")
+    ap.add_argument("--delta-capacity", type=int, default=32,
+                    help="max resident per-user deltas (hard LRU bound)")
     return ap
 
 
@@ -98,6 +127,13 @@ def main(argv=None):
           f"(util {stats.page_util:.2f}), "
           f"prefix hit rate {stats.prefix_hit_rate:.2f}, "
           f"{stats.cow_splits} COW splits")
+    if args.users > 0:
+        print(f"[serve] personalization: {args.users} users, "
+              f"{stats.train_waves} train waves "
+              f"({stats.wave_s_per_token * 1e3:.2f}ms/token overhead), "
+              f"delta hit rate {stats.delta_hit_rate:.2f}, "
+              f"{stats.delta_resident_bytes} delta bytes resident, "
+              f"{stats.delta_evictions} evictions")
     return stats
 
 

@@ -36,6 +36,38 @@ def last_valid(x, length):
     return jnp.take_along_axis(x, idx - 1, axis=1)[:, 0]
 
 
+def delta_matmul_add(y, x, delta, name: str):
+    """Per-user compact-delta correction applied at matmul time.
+
+    `y = smm(x, w)` already holds the base-model projection; this adds the
+    user contribution `x @ delta` into ONLY the selected output-channel
+    blocks — the gather-add dual of `scatter_param_blocks`, so no dense
+    per-user weight copy ever exists. Per-row deltas make personalization
+    pure batch data under the jitted decode step (no per-user retrace);
+    zero-valued rows are an exact no-op, so frozen-prefix layers and
+    non-personalized batch rows share the same trace.
+
+      y      [B, S, N]
+      delta["val"][name]  [B, d_in, n_shards, n_sel, block]  f32
+      delta["idx"][name]  [B, n_shards, n_sel]               int32
+    """
+    if delta is None or name not in delta["val"]:
+        return y
+    val, idx = delta["val"][name], delta["idx"][name]
+    b, s, n = y.shape
+    n_shards, n_sel, block = val.shape[-3:]
+    n_blocks = n // (n_shards * block)
+    extra = jnp.einsum("bsk,bkhjc->bshjc", x, val,
+                       preferred_element_type=jnp.float32)
+    yb = y.reshape(b, s, n_shards, n_blocks, block).astype(jnp.float32)
+    rows = jnp.arange(b)[:, None, None]
+    shards = jnp.arange(n_shards)[None, :, None]
+    # advanced indices at axes 0/2/3 with a slice between -> result batch
+    # dims [B, h, j] lead, so move extra's seq axis after the index axes
+    yb = yb.at[rows, :, shards, idx].add(extra.transpose(0, 2, 3, 1, 4))
+    return yb.reshape(b, s, n).astype(y.dtype)
+
+
 def tree_size_bytes(tree) -> int:
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
 

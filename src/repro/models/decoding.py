@@ -225,29 +225,51 @@ def copy_pool_rows(pools, src_row, dst_row, n: int):
     return jax.tree.map(cp, pools)
 
 
+def _delta_sub(delta, *path):
+    """Slice a per-layer delta tree ({"idx": ..., "val": ...}, leaves keyed
+    by the same sublayer path as the params) down to one sublayer's
+    {leaf -> array} dicts; None when that sublayer carries no delta."""
+    if delta is None:
+        return None
+    idx, val = delta["idx"], delta["val"]
+    for name in path:
+        if not isinstance(idx, dict) or name not in idx:
+            return None
+        idx, val = idx[name], val[name]
+    if not idx:
+        return None
+    return {"idx": idx, "val": val}
+
+
 def _paged_block(cfg, kind: str, p, x, start, active, length, st_c, pl_c,
-                 page_table, page_size: int):
-    """One scan step of `paged_step`; mirrors `_decode_block` for s >= 1."""
-    def attn(sub_p, h, role, window, st, pl):
+                 page_table, page_size: int, delta=None):
+    """One scan step of `paged_step`; mirrors `_decode_block` for s >= 1.
+
+    `delta` carries this layer's per-batch-row compact weight deltas (see
+    `repro.core.delta`); covered attention/MLP projections apply them as a
+    gather-add at matmul time."""
+    def attn(sub_p, h, role, window, st, pl, d=None):
         if role == "ring":
             return L.chunk_ring_attention(sub_p, cfg, h, start, active, st,
-                                          window=window, length=length)
+                                          window=window, length=length,
+                                          delta=d)
         a, pool = L.chunk_paged_attention(sub_p, cfg, h, start, active, pl,
                                           page_table, page_size=page_size,
-                                          length=length)
+                                          length=length, delta=d)
         return a, pool
 
     if kind in ("dense", "moe"):
         window = T._window_for(cfg, kind, 0) if kind == "dense" else 0
         role = "ring" if window > 0 else "paged"
         h = L.apply_norm(p["attn_ln"], x)
-        a, c_out = attn(p["attn"], h, role, window, st_c, pl_c)
+        a, c_out = attn(p["attn"], h, role, window, st_c, pl_c,
+                        _delta_sub(delta, "attn"))
         x = x + a
         h = L.apply_norm(p["mlp_ln"], x)
         if kind == "moe":
             y, _ = MOE.apply_moe(p["moe"], cfg, h)
         else:
-            y = L.apply_mlp(p["mlp"], cfg, h)
+            y = L.apply_mlp(p["mlp"], cfg, h, delta=_delta_sub(delta, "mlp"))
         x = x + y
         return (x, c_out, {}) if role == "ring" else (x, {}, c_out)
     if kind == "gemma_super":
@@ -257,14 +279,16 @@ def _paged_block(cfg, kind: str, p, x, start, active, length, st_c, pl_c,
             window = T._window_for(cfg, kind, i)
             h = L.apply_norm(sp["attn_ln"], x)
             a, c_out = attn(sp["attn"], h, role, window,
-                            st_c.get(sub), pl_c.get(sub))
+                            st_c.get(sub), pl_c.get(sub),
+                            _delta_sub(delta, sub, "attn"))
             if role == "ring":
                 new_st[sub] = c_out
             else:
                 new_pl[sub] = c_out
             x = x + a
             h = L.apply_norm(sp["mlp_ln"], x)
-            x = x + L.apply_mlp(sp["mlp"], cfg, h)
+            x = x + L.apply_mlp(sp["mlp"], cfg, h,
+                                delta=_delta_sub(delta, sub, "mlp"))
         return x, new_st, new_pl
     if kind == "jamba_super":
         attn_pos = cfg.attn_every // 2
@@ -275,7 +299,8 @@ def _paged_block(cfg, kind: str, p, x, start, active, length, st_c, pl_c,
             h = L.apply_norm(sp["mixer_ln"], x)
             if i == attn_pos:
                 a, new_pl[sub] = attn(sp["attn"], h, "paged", 0, None,
-                                      pl_c[sub])
+                                      pl_c[sub],
+                                      _delta_sub(delta, sub, "attn"))
                 x = x + a
             else:
                 y, new_st[sub] = M.apply_mamba(sp["mamba"], cfg, h,
@@ -285,7 +310,8 @@ def _paged_block(cfg, kind: str, p, x, start, active, length, st_c, pl_c,
             if T._moe_at(cfg, i):
                 y, _ = MOE.apply_moe(sp["moe"], cfg, h)
             else:
-                y = L.apply_mlp(sp["mlp"], cfg, h)
+                y = L.apply_mlp(sp["mlp"], cfg, h,
+                                delta=_delta_sub(delta, sub, "mlp"))
             x = x + y
         return x, new_st, new_pl
     if kind == "rwkv":
@@ -301,7 +327,7 @@ def _paged_block(cfg, kind: str, p, x, start, active, length, st_c, pl_c,
 
 
 def paged_step(cfg, params, batch, state, pools, page_table, *,
-               page_size: int):
+               page_size: int, deltas=None):
     """s >= 1 tokens per batch row against the paged serve caches.
 
     batch: {"tokens" [B,S] | "embeds" [B,S,d], "start" [B], "active" [B],
@@ -313,6 +339,14 @@ def paged_step(cfg, params, batch, state, pools, page_table, *,
     trace for all prompt lengths — with padded positions (j >= length)
     contributing nothing: cache/pool writes dropped, recurrent state
     frozen, and the returned logits taken at each row's position length-1.
+
+    `deltas` (optional) is {seg_name: {"idx": ..., "val": ...}} of per-user
+    compact weight deltas whose leaves are [scan_steps, B, ...] — they ride
+    the layer scan next to the params, and each batch row applies its own
+    delta as a gather-add inside the covered matmuls. Zero rows are exact
+    no-ops, so one trace serves personalized and plain rows alike; the
+    engine passes a fixed structure (or None) so the trace count is
+    unchanged vs. non-personalized serving.
     Returns (last-valid-position logits [B, V], state, pools).
     """
     start = batch["start"]
@@ -329,17 +363,25 @@ def paged_step(cfg, params, batch, state, pools, page_table, *,
     new_state, new_pools = {}, {}
     for seg in T.segment_layout(cfg):
         stack = params["segments"][seg.name]
+        d_seg = None if deltas is None else deltas.get(seg.name)
 
-        def body(x, xs):
-            p_l, st_l, pl_l = xs
+        def body(x, xs, d_seg=d_seg):
+            if d_seg is None:
+                p_l, st_l, pl_l = xs
+                d_l = None
+            else:
+                p_l, st_l, pl_l, d_l = xs
             x = constrain(x, "batch", "seq", "model_d")
             x, st_out, pl_out = _paged_block(
                 cfg, seg.kind, p_l, x, start, active, length, st_l, pl_l,
-                page_table, page_size)
+                page_table, page_size, delta=d_l)
             return x, (merge(st_out, st_l), pl_out)
 
+        xs = (stack, state[seg.name], pools[seg.name])
+        if d_seg is not None:
+            xs = xs + (d_seg,)
         x, (new_state[seg.name], new_pools[seg.name]) = jax.lax.scan(
-            body, x, (stack, state[seg.name], pools[seg.name]))
+            body, x, xs)
     x = L.apply_norm(T._pick(params, None, "final_norm"), x)
     # each row's last VALID position (prefill chunks are padded)
     x_last = last_valid(x, length)

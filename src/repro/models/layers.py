@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.sparse_update import smm
-from repro.models.common import dense_init
+from repro.models.common import delta_matmul_add, dense_init
 from repro.sharding import constrain
 
 # ---------------------------------------------------------------------------
@@ -127,12 +127,15 @@ def init_attention(key, cfg, dtype):
     }
 
 
-def _qkv(p, cfg, x, positions, sel=None):
+def _qkv(p, cfg, x, positions, sel=None, delta=None):
     b, s, d = x.shape
     hd = cfg.resolved_head_dim
-    q = smm(x, p["wq"], sel, "wq").reshape(b, s, cfg.num_heads, hd)
-    k = smm(x, p["wk"], sel, "wk").reshape(b, s, cfg.num_kv_heads, hd)
-    v = smm(x, p["wv"], sel, "wv").reshape(b, s, cfg.num_kv_heads, hd)
+    q = delta_matmul_add(smm(x, p["wq"], sel, "wq"), x, delta, "wq") \
+        .reshape(b, s, cfg.num_heads, hd)
+    k = delta_matmul_add(smm(x, p["wk"], sel, "wk"), x, delta, "wk") \
+        .reshape(b, s, cfg.num_kv_heads, hd)
+    v = delta_matmul_add(smm(x, p["wv"], sel, "wv"), x, delta, "wv") \
+        .reshape(b, s, cfg.num_kv_heads, hd)
     if getattr(cfg, "mrope", False):
         q = apply_mrope(q, positions, cfg.rope_theta)
         k = apply_mrope(k, positions, cfg.rope_theta)
@@ -392,7 +395,7 @@ def _serve_positions(cfg, start, s):
 
 
 def chunk_ring_attention(p, cfg, x, start, active, cache, *, window: int,
-                         length=None):
+                         length=None, delta=None):
     """Sliding-window attention for a chunk of s tokens per batch row.
 
     cache: {"k","v": [B, W, H, D]} ring buffers (position p at slot p % W).
@@ -409,7 +412,7 @@ def chunk_ring_attention(p, cfg, x, start, active, cache, *, window: int,
     if length is None:
         length = jnp.full((b,), s, jnp.int32)
     w_cap = cache["k"].shape[1]
-    q, k, v = _qkv(p, cfg, x, _serve_positions(cfg, start, s))
+    q, k, v = _qkv(p, cfg, x, _serve_positions(cfg, start, s), delta=delta)
 
     j = jnp.arange(s)
     qpos = start[:, None] + j[None, :]                       # [B, S]
@@ -441,11 +444,12 @@ def chunk_ring_attention(p, cfg, x, start, active, cache, *, window: int,
         k.astype(cache["k"].dtype), mode="drop")
     v_cache = cache["v"].at[rows, slot].set(
         v.astype(cache["v"].dtype), mode="drop")
-    return smm(out, p["wo"], None, "wo"), {"k": k_cache, "v": v_cache}
+    y = delta_matmul_add(smm(out, p["wo"], None, "wo"), out, delta, "wo")
+    return y, {"k": k_cache, "v": v_cache}
 
 
 def chunk_paged_attention(p, cfg, x, start, active, pool, page_table, *,
-                          page_size: int, length=None):
+                          page_size: int, length=None, delta=None):
     """Full (window-free) attention for a chunk of s tokens per batch row,
     reading and writing K/V through per-row page tables.
 
@@ -462,7 +466,7 @@ def chunk_paged_attention(p, cfg, x, start, active, pool, page_table, *,
     ps = page_size
     r_rows = pool["k"].shape[0]
     mp = page_table.shape[1]
-    q, k, v = _qkv(p, cfg, x, _serve_positions(cfg, start, s))
+    q, k, v = _qkv(p, cfg, x, _serve_positions(cfg, start, s), delta=delta)
 
     # gather the cached prefix in logical order: [B, MP*ps] physical rows
     phys = jnp.clip(page_table, 0)[:, :, None] * ps + \
@@ -494,7 +498,8 @@ def chunk_paged_attention(p, cfg, x, start, active, pool, page_table, *,
         k.reshape(b * s, *k.shape[2:]).astype(pool["k"].dtype), mode="drop")
     v_pool = pool["v"].at[dest].set(
         v.reshape(b * s, *v.shape[2:]).astype(pool["v"].dtype), mode="drop")
-    return smm(out, p["wo"], None, "wo"), {"k": k_pool, "v": v_pool}
+    y = delta_matmul_add(smm(out, p["wo"], None, "wo"), out, delta, "wo")
+    return y, {"k": k_pool, "v": v_pool}
 
 
 def init_kv_cache(cfg, batch: int, seq_len: int, *, window: int = 0, dtype=None):
@@ -528,16 +533,22 @@ def init_mlp(key, cfg, dtype, d_ff: Optional[int] = None):
     raise ValueError(kind)
 
 
-def apply_mlp(p, cfg, x, sel=None):
+def apply_mlp(p, cfg, x, sel=None, delta=None):
     kind = cfg.mlp_kind
     if kind == "swiglu":
-        h = jax.nn.silu(smm(x, p["w_gate"], sel, "w_gate")) * smm(x, p["w_up"], sel, "w_up")
+        h = jax.nn.silu(
+            delta_matmul_add(smm(x, p["w_gate"], sel, "w_gate"), x, delta,
+                             "w_gate")) * \
+            delta_matmul_add(smm(x, p["w_up"], sel, "w_up"), x, delta, "w_up")
     elif kind == "gelu":
-        h = jax.nn.gelu(smm(x, p["w_up"], sel, "w_up"))
+        h = jax.nn.gelu(
+            delta_matmul_add(smm(x, p["w_up"], sel, "w_up"), x, delta, "w_up"))
     elif kind == "sq_relu":
-        h = jax.nn.relu(smm(x, p["w_up"], sel, "w_up"))
+        h = delta_matmul_add(smm(x, p["w_up"], sel, "w_up"), x, delta, "w_up")
+        h = jax.nn.relu(h)
         h = h * h
     else:
         raise ValueError(kind)
     h = constrain(h, "batch", "seq", "ff")
-    return smm(h, p["w_down"], sel, "w_down")
+    return delta_matmul_add(smm(h, p["w_down"], sel, "w_down"), h, delta,
+                            "w_down")

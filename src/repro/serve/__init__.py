@@ -46,7 +46,15 @@ Accounting: ``requests_completed``/``tokens_out`` count FINISH transitions
 only. Streaming callbacks (``Request.stream``) see every token in order
 and may cancel mid-stream; cancelled and timed-out requests land in
 ``requests_cancelled``/``tokens_cancelled`` and never inflate throughput.
+
+Per-user personalization (``deltas.DeltaStore`` + ``core/delta.py``): an
+engine built with a ``PersonalizationConfig`` routes ``Request.user`` to a
+compact per-user parameter delta — applied at decode as a gather-add inside
+the jitted step, advanced by an online compact train wave when that user's
+requests complete, and LRU-evicted under a hard capacity bound. The shared
+base model is never written.
 """
+from repro.serve.deltas import DeltaStore, PersonalizationConfig
 from repro.serve.engine import (RequestResult, ServeEngine, ServeStats,
                                 make_random_requests,
                                 make_shared_prefix_requests)
@@ -55,7 +63,8 @@ from repro.serve.sampling import sample_token
 from repro.serve.scheduler import Request, Scheduler, Slot, SlotState
 
 __all__ = [
-    "PagePool", "PrefixCache", "Request", "RequestResult", "Scheduler",
-    "ServeEngine", "ServeStats", "Slot", "SlotState", "sample_token",
+    "DeltaStore", "PagePool", "PersonalizationConfig", "PrefixCache",
+    "Request", "RequestResult", "Scheduler", "ServeEngine", "ServeStats",
+    "Slot", "SlotState", "sample_token",
     "make_random_requests", "make_shared_prefix_requests",
 ]

@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import zlib
 from typing import Optional
 
 import jax
@@ -39,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import decoding as D
+from repro.serve.deltas import DeltaStore, PersonalizationConfig
 from repro.serve.paging import PagePool, PrefixCache
 from repro.serve.sampling import sample_token
 from repro.serve.scheduler import Request, Scheduler, Slot, SlotState
@@ -73,6 +75,15 @@ class ServeStats:
     pages_peak: int         # peak pages in use (sharing lowers this)
     cow_splits: int
     results: dict           # rid -> RequestResult
+    # per-user personalization (all zero when the engine has none)
+    delta_hits: int = 0             # delta-store admissions that hit
+    delta_lookups: int = 0          # delta-store admissions total
+    delta_evictions: int = 0
+    delta_resident_bytes: int = 0   # host bytes of resident deltas at end
+    train_waves: int = 0            # online train waves run
+    train_wave_s: float = 0.0       # wall time spent in train waves
+    wave_losses: list = dataclasses.field(default_factory=list)
+    # (user, pre-update loss) per wave, in wave order
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -82,6 +93,15 @@ class ServeStats:
     def page_util(self) -> float:
         return self.pages_peak / max(1, self.pages_total)
 
+    @property
+    def delta_hit_rate(self) -> float:
+        return self.delta_hits / max(1, self.delta_lookups)
+
+    @property
+    def wave_s_per_token(self) -> float:
+        """Train-wave overhead amortized over every decoded token."""
+        return self.train_wave_s / max(1, self.tokens_out)
+
 
 class ServeEngine:
     """Paged continuous-batching serve loop for one model + parameter set."""
@@ -89,7 +109,8 @@ class ServeEngine:
     def __init__(self, cfg, params, *, num_slots: int, max_len: int,
                  temperature: float = 0.0, eos_id: Optional[int] = None,
                  seed: int = 0, page_size: int = 16,
-                 num_pages: Optional[int] = None, prefix_sharing: bool = True):
+                 num_pages: Optional[int] = None, prefix_sharing: bool = True,
+                 personalization: Optional[PersonalizationConfig] = None):
         assert num_slots >= 1 and max_len >= 2 and page_size >= 1
         self.cfg = cfg
         self.params = params
@@ -115,8 +136,8 @@ class ServeEngine:
 
         ps = page_size
         self._step = jax.jit(
-            lambda p, batch, state, pools, pt: D.paged_step(
-                cfg, p, batch, state, pools, pt, page_size=ps))
+            lambda p, batch, state, pools, pt, deltas: D.paged_step(
+                cfg, p, batch, state, pools, pt, page_size=ps, deltas=deltas))
         self._extract = jax.jit(D.cache_extract_row)
         self._insert = jax.jit(D.cache_insert_row)
         self._reset = jax.jit(D.cache_reset_row)
@@ -124,6 +145,147 @@ class ServeEngine:
             lambda pools, src, dst: D.copy_pool_rows(pools, src, dst, ps))
         self._sample = jax.jit(
             lambda logits, key: sample_token(logits, key, self.temperature))
+
+        self._p13n = personalization
+        self._dbatch = None
+        if personalization is not None:
+            self._init_personalization()
+
+    # -- per-user personalization ------------------------------------------
+
+    def _init_personalization(self):
+        """Build the delta-aware serving pieces: the selection plan pruned to
+        decode-coverable leaves, the frozen/trainable base split, the online
+        train wave, and the per-user delta store. Requests with user=None
+        keep zero delta rows (an exact no-op) under the SAME jitted step."""
+        from repro.core import build_plan, random_selection
+        from repro.core.delta import (DeltaState, decode_delta_spec,
+                                      zeros_delta_tree)
+        from repro.train.steps import make_online_wave, split_params
+
+        p = self._p13n
+        assert not self.cfg.embed_inputs, (
+            "personalization trains on token streams; embed-input frontends "
+            "have none")
+        plan = build_plan(self.cfg, p.sparse, 0)
+        frozen, trainable = split_params(self.params, plan)
+        spec = decode_delta_spec(plan, trainable["segments"])
+        if not spec:
+            raise ValueError(
+                "no decode-coverable selectable leaves for this arch "
+                "(personalized decode covers attn/mlp projections only)")
+        # train exactly what decode can apply: waves update only the covered
+        # leaves, so the served model IS the trained one
+        self._plan = dataclasses.replace(plan, spec=spec)
+        self._frozen, self._trainable = frozen, trainable
+        self._seg_steps = {
+            seg: int(jax.tree.leaves(self.params["segments"][seg])[0].shape[0])
+            for seg in spec}
+        self._delta_key = jax.random.PRNGKey(p.seed)
+        self._wave = jax.jit(make_online_wave(
+            self.cfg, p.sparse, p.optimizer, self._plan,
+            wave_tokens=p.train_tokens, kernels=p.use_kernels))
+        self._zeros_delta = zeros_delta_tree
+        self._deltas = DeltaStore(p.store_capacity, self._make_delta_entry)
+        self._DeltaState = DeltaState
+        self._random_selection = random_selection
+
+    def _make_delta_entry(self, user):
+        """Fresh zero delta with this user's fixed channel selection (the
+        user id seeds the selection, so it is stable across evictions)."""
+        salt = zlib.crc32(str(user).encode()) & 0x7FFFFFFF
+        key = jax.random.fold_in(self._delta_key, salt)
+        idx_dev = self._random_selection(self._plan, key)
+        idx = {seg: jax.tree.map(np.asarray, idx_dev[seg])
+               for seg in self._plan.spec}
+        vals = self._zeros_delta(self._trainable["segments"], idx,
+                                 self._plan.spec, xp=np)
+        return self._DeltaState(idx=idx, vals=vals)
+
+    def _delta_batch_zeros(self):
+        """Device-resident per-slot delta rows, all zero: {seg: {"idx",
+        "val"}} with leaves [scan_steps, num_slots, ...] so they ride the
+        layer scan next to the params (zero rows over the frozen prefix and
+        for non-personalized slots)."""
+        from repro.core.sparse_update import SelSpec
+        b = self.num_slots
+        out = {}
+        for seg, spec in self._plan.spec.items():
+            steps = self._seg_steps[seg]
+            is_sp = lambda x: isinstance(x, SelSpec)
+            idx = jax.tree.map(
+                lambda sp: jnp.zeros((steps, b, sp.n_shards, sp.n_sel),
+                                     jnp.int32), spec, is_leaf=is_sp)
+
+            def wv(stack, sp):
+                if isinstance(sp, SelSpec):
+                    d_in = stack.shape[1]
+                    return jnp.zeros(
+                        (steps, b, d_in, sp.n_shards, sp.n_sel, sp.block),
+                        jnp.float32)
+                return {k: wv(stack[k], sp[k]) for k in sp}
+
+            out[seg] = {"idx": idx,
+                        "val": wv(self._trainable["segments"][seg], spec)}
+        return out
+
+    def _delta_row_tree(self, entry):
+        """Lift a host DeltaState into [scan_steps, 1, ...] device rows,
+        zero-padded over the frozen layer prefix (trainable = LAST K steps),
+        ready for `cache_insert_row` into the slot's delta batch row."""
+        out = {}
+        for seg in self._plan.spec:
+            steps = self._seg_steps[seg]
+
+            def pad(leaf, dt):
+                src = np.zeros((steps, 1) + leaf.shape[1:], dt)
+                src[steps - leaf.shape[0]:, 0] = leaf
+                return jnp.asarray(src)
+
+            out[seg] = {
+                "idx": jax.tree.map(lambda a: pad(a, np.int32),
+                                    entry.idx[seg]),
+                "val": jax.tree.map(lambda a: pad(a, np.float32),
+                                    entry.vals[seg]),
+            }
+        return out
+
+    def _online_wave(self, slot, sched):
+        """Run one compact train wave on the completed request's token
+        stream, advance the user's delta in the store, and re-materialize
+        the delta rows of any live slot of the same user (their in-flight
+        decode picks up the update mid-stream)."""
+        req = slot.request
+        p = self._p13n
+        stream = np.concatenate([
+            np.asarray(req.tokens, np.int64),
+            np.asarray(slot.out_tokens, np.int64)])
+        n = p.train_tokens
+        arr = stream[-(n + 1):] if len(stream) >= n + 1 \
+            else np.resize(stream, n + 1)
+        batch = {"tokens": jnp.asarray(arr[:-1], jnp.int32)[None],
+                 "labels": jnp.asarray(arr[1:], jnp.int32)[None]}
+        entry = self._deltas.get(req.user)
+        vals_dev = jax.tree.map(jnp.asarray, entry.vals)
+        idx_dev = jax.tree.map(jnp.asarray, entry.idx)
+        t0 = time.perf_counter()
+        new_vals, metrics = self._wave(self._trainable, self._frozen,
+                                       vals_dev, idx_dev, batch,
+                                       self._next_key())
+        jax.block_until_ready(new_vals)
+        self._wave_s += time.perf_counter() - t0
+        self._wave_count += 1
+        self._wave_losses.append((req.user, float(metrics["loss"])))
+        entry.vals = jax.tree.map(np.asarray, new_vals)
+        self._deltas.put(req.user, entry)
+        row_tree = None
+        for other in sched.live_slots():
+            if other is slot or other.request is None or \
+                    other.request.user != req.user:
+                continue
+            if row_tree is None:
+                row_tree = self._delta_row_tree(entry)
+            self._dbatch = self._insert(self._dbatch, row_tree, other.index)
 
     # -- input plumbing ----------------------------------------------------
 
@@ -263,6 +425,11 @@ class ServeEngine:
         self._pt = np.full((self.num_slots, self.max_pages), -1, np.int32)
         self._pool = PagePool(max(1, self.num_pages), self.page_size)
         self._cache = PrefixCache(self._pool) if self.prefix_sharing else None
+        if self._p13n is not None:
+            self._dbatch = self._delta_batch_zeros()
+            self._duser = [None] * self.num_slots
+            self._wave_s, self._wave_count = 0.0, 0
+            self._wave_losses = []
         prefill_chunks = 0
         results: dict[int, RequestResult] = {}
         t0 = time.perf_counter()
@@ -270,8 +437,13 @@ class ServeEngine:
                             else None) for r in requests}
 
         def close(slot, status):
-            results[slot.request.rid] = RequestResult(
-                slot.request.rid, list(slot.out_tokens),
+            req = slot.request
+            if self._p13n is not None and req.user is not None:
+                if status == "completed" and req.tokens is not None:
+                    self._online_wave(slot, sched)
+                self._deltas.release(req.user)
+            results[req.rid] = RequestResult(
+                req.rid, list(slot.out_tokens),
                 time.perf_counter() - t0, status)
             self._release_slot(slot)
             if verbose and status == "completed":
@@ -297,7 +469,11 @@ class ServeEngine:
             while (adm := sched.peek_admission()) is not None:
                 slot, req = adm
                 matched, covered = [], 0
-                if self._cache is not None and req.tokens is not None:
+                # personalized requests compute K/V under their own delta:
+                # sharing those pages (or adopting shared ones) would serve
+                # another user's prefix from the wrong weights
+                if self._cache is not None and req.tokens is not None \
+                        and req.user is None:
                     # leave >= 1 prompt token uncached: something must
                     # produce the logits that sample the first token
                     matched, covered = self._cache.match(
@@ -320,6 +496,17 @@ class ServeEngine:
                 self._pt[slot.index, :] = -1
                 self._pt[slot.index, :len(matched)] = slot.page_ids
                 state = self._reset(state, slot.index)
+                if self._p13n is not None:
+                    if req.user is not None:
+                        entry = self._deltas.admit(req.user)
+                        self._dbatch = self._insert(
+                            self._dbatch, self._delta_row_tree(entry),
+                            slot.index)
+                        self._duser[slot.index] = req.user
+                    elif self._duser[slot.index] is not None:
+                        # recycle a slot a personalized request left dirty
+                        self._dbatch = self._reset(self._dbatch, slot.index)
+                        self._duser[slot.index] = None
 
             # 3) chunked prefill: one page-sized chunk per PREFILL slot
             for slot in sched.prefill_slots():
@@ -328,6 +515,7 @@ class ServeEngine:
                 # since our admission can be attached instead of recomputed
                 # (same-wave admissions of a common prefix share this way)
                 while (self._cache is not None and req.tokens is not None
+                       and req.user is None
                        and slot.pos % self.page_size == 0
                        and slot.pos + self.page_size <= req.prompt_len - 1
                        and slot.pos // self.page_size == len(slot.page_ids)):
@@ -344,13 +532,16 @@ class ServeEngine:
                     slot, slot.pos, slot.pos + size, pools)
                 st_row = self._extract(state, slot.index)
                 pt_row = jnp.asarray(self._pt[slot.index:slot.index + 1])
+                d_row = None if self._dbatch is None else \
+                    self._extract(self._dbatch, slot.index)
                 logits, st_row, pools = self._step(
                     self.params, self._chunk_batch(req, slot.pos, size),
-                    st_row, pools, pt_row)
+                    st_row, pools, pt_row, d_row)
                 state = self._insert(state, st_row, slot.index)
                 slot.pos += size
                 prefill_chunks += 1
-                if self._cache is not None and req.tokens is not None:
+                if self._cache is not None and req.tokens is not None \
+                        and req.user is None:
                     slot.registered_pages = self._cache.register_full(
                         np.asarray(req.tokens),
                         min(slot.pos, req.prompt_len) // self.page_size,
@@ -358,6 +549,7 @@ class ServeEngine:
                 if slot.pos == req.prompt_len:
                     sched.finish_prefill(slot)
                     if self._cache is not None and req.tokens is not None \
+                            and req.user is None \
                             and self._headroom(sched) >= 1:
                         self._cache.register_partial(
                             np.asarray(req.tokens), slot.page_ids[-1])
@@ -389,7 +581,7 @@ class ServeEngine:
             logits, state, pools = self._step(
                 self.params,
                 self._decode_batch(tokens_row, pos_row, active_row),
-                state, pools, jnp.asarray(self._pt))
+                state, pools, jnp.asarray(self._pt), self._dbatch)
             toks = np.asarray(self._sample(logits, self._sample_key()))
             for slot in active:           # inactive rows: sampled, discarded
                 slot.pos += 1             # the fed token is now cached
@@ -420,6 +612,17 @@ class ServeEngine:
             pages_peak=self._pool.peak_in_use,
             cow_splits=self._pool.cow_splits,
             results=results,
+            delta_hits=(self._deltas.hits if self._p13n is not None else 0),
+            delta_lookups=(self._deltas.hits + self._deltas.misses
+                           if self._p13n is not None else 0),
+            delta_evictions=(self._deltas.evictions
+                             if self._p13n is not None else 0),
+            delta_resident_bytes=(self._deltas.resident_bytes
+                                  if self._p13n is not None else 0),
+            train_waves=(self._wave_count if self._p13n is not None else 0),
+            train_wave_s=(self._wave_s if self._p13n is not None else 0.0),
+            wave_losses=(list(self._wave_losses)
+                         if self._p13n is not None else []),
         )
 
 

@@ -45,6 +45,11 @@ class Request:
     request mid-stream. `timeout_s` is a wall-clock budget from submission
     — a request past its deadline is cancelled (or dropped from the queue
     without ever being admitted).
+
+    `user` routes the request to a per-user compact delta when the engine
+    is built with a `PersonalizationConfig`: decode applies that user's
+    delta (gather-add), and completion feeds an online train wave that
+    advances it. None = plain base-model serving for this request.
     """
     rid: int
     max_new_tokens: int
@@ -52,6 +57,7 @@ class Request:
     embeds: Optional[np.ndarray] = None
     stream: Optional[Callable[[int, int], Optional[bool]]] = None
     timeout_s: Optional[float] = None
+    user: Optional[object] = None
 
     @property
     def prompt_len(self) -> int:

@@ -182,3 +182,69 @@ def make_train_step(tc: TrainConfig, plan: SelectionPlan,
 
     train_step.donate_argnums = (0,) if donate else ()
     return train_step
+
+
+def make_online_wave(cfg, sparse, optimizer, plan: SelectionPlan, *,
+                     wave_tokens: int, kernels: bool = False,
+                     remat: str = "selected"):
+    """Builds the serve engine's online personalization train wave.
+
+    Returns a jit-able `wave(trainable_base, frozen, delta_vals, sel_idx,
+    batch, rng) -> (new_delta_vals, metrics)` that advances one user's
+    compact delta (`repro.core.delta`) by one step of the existing 2-launch
+    compact train step, WITHOUT touching the shared base params:
+
+      1. materialize `base + delta` for the trainable suffix (gather-add +
+         scatter — a transient copy of only the K trainable layers),
+      2. run the compact-gradient train step on it (step index pinned to 0
+         so the three-phase schedule never reselects; requires
+         `sparse.phase_fixed_early >= 1`),
+      3. re-extract `gather(new) - gather(base)` as the updated delta.
+
+    The reported loss is computed BEFORE the update, so a falling sequence
+    of wave losses on one user's traffic demonstrates personalization.
+    Restricted to stateless optimizers (sgd, momentum 0) — per-user state
+    is the delta and nothing else, matching the compact step's bitwise
+    guarantee. The kernel-routing flag is baked in at trace time via
+    `use_kernels`, keeping the pinned 2-launch-per-leaf property: the
+    materialize/extract gathers stay on the jnp path and add no launches.
+    """
+    from repro.configs.base import ShapeConfig
+    from repro.core.delta import apply_delta_tree, extract_delta_tree
+    from repro.core.sparse_update import use_kernels
+
+    assert optimizer.kind == "sgd" and optimizer.momentum == 0.0, (
+        "online waves keep no per-user optimizer state: use sgd, momentum 0")
+    assert sparse.phase_fixed_early >= 1, (
+        "wave pins step=0; phase_fixed_early=0 would reselect in-wave")
+    tc = TrainConfig(model=cfg,
+                     shape=ShapeConfig("wave", wave_tokens, 1, "train"),
+                     sparse=sparse, optimizer=optimizer, remat=remat,
+                     compact_grads=True)
+    step = make_train_step(tc, plan, use_selection=True, donate=False,
+                           compact_grads=True)
+
+    def wave(trainable_base, frozen, delta_vals, sel_idx, batch, rng):
+        base_segs = trainable_base.get("segments", {})
+        pers = dict(trainable_base)
+        pers["segments"] = apply_delta_tree(base_segs, delta_vals, sel_idx,
+                                            plan.spec)
+        state = {
+            "step": jnp.zeros((), jnp.int32),
+            "params_trainable": pers,
+            "params_frozen": frozen,
+            "opt": init_opt_state(tc.optimizer, pers),
+            "sel_idx": sel_idx,
+            "rng": rng,
+        }
+        if kernels:
+            with use_kernels(True):
+                new_state, metrics = step(state, batch)
+        else:
+            new_state, metrics = step(state, batch)
+        new_vals = extract_delta_tree(
+            base_segs, new_state["params_trainable"]["segments"], sel_idx,
+            plan.spec)
+        return new_vals, metrics
+
+    return wave
