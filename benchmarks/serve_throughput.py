@@ -12,7 +12,11 @@ tokens). Alongside tok/s and p50/p95 latency the benchmark reports
 page-pool utilization (peak pages / pool pages) and the prompt-prefix
 hit rate; `--shared-prefix-len N` runs the system-prompt workload where
 sharing shows up as hit rate > 0 and a LOWER page peak than
-`--no-prefix-sharing` on the same workload.
+`--no-prefix-sharing` on the same workload. `--branching-prefix` runs
+the zipf-branching partially-overlapping prefix workload (prompts agree
+for a random number of pages, then diverge) — the radix tree's home
+turf — and, in radix mode, a third stats line reports tree node count,
+snapshot hit rate, and spill/rehydrate counts.
 
 `--arch all` sweeps the four cache families (dense KV, ring-buffer, rwkv
 state, hybrid mamba state).
@@ -99,6 +103,13 @@ def bench_one(args, arch: str):
           f"page_util={stats.page_util:.2f} "
           f"prefix_hit_rate={stats.prefix_hit_rate:.2f} "
           f"cow_splits={stats.cow_splits}")
+    if stats.prefix_mode == "radix":
+        print(f"[{arch}] radix_nodes={stats.radix_nodes} "
+              f"snapshot_hit_rate={stats.snapshot_hit_rate:.2f} "
+              f"snapshots_stored={stats.snapshots_stored} "
+              f"spills={stats.spills} "
+              f"rehydrates={stats.rehydrates} "
+              f"spill_entries={stats.spill_entries}")
     if ns.users > 0:
         print(f"[{arch}] personalize_frac={ns.personalize_frac} "
               f"users={ns.users} train_waves={stats.train_waves} "

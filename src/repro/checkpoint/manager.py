@@ -157,6 +157,41 @@ def restore_delta_store(path: str, store):
     return meta
 
 
+def save_spill_tier(path: str, tier, meta: Optional[dict] = None):
+    """Serialize a serve-engine prefix-cache spill tier (`repro.serve.
+    paging.SpillTier`) into the standard .ckpt format: one subtree per
+    spilled page boundary — the prefix tokens plus optional device page
+    rows and recurrent-state snapshot — with LRU order preserved via
+    zero-padded keys recorded in meta["spill_entries"]. Duck-typed (`tier`
+    only needs `items()` yielding (tokens, entry) oldest-first), so this
+    module stays serve-import-free."""
+    tree, order = {}, []
+    for i, (tokens, ent) in enumerate(tier.items()):
+        key = f"e{i:06d}"
+        sub = {"tokens": np.asarray(tokens, np.int32)}
+        if ent.get("pages") is not None:
+            sub["pages"] = ent["pages"]
+        if ent.get("snap") is not None:
+            sub["snap"] = ent["snap"]
+        tree[key] = sub
+        order.append(key)
+    meta = dict(meta or {})
+    meta["spill_entries"] = order
+    save_pytree(path, tree, meta)
+
+
+def restore_spill_tier(path: str, tier):
+    """Restore entries written by `save_spill_tier` into `tier` via its
+    `put()` (LRU order preserved, capacity bound honored — restoring more
+    entries than capacity drops the least-recent). Returns the meta."""
+    arrays, meta = load_pytree(path)
+    for key in meta.get("spill_entries", sorted(arrays)):
+        ent = arrays[key]
+        tier.put(ent["tokens"], pages=ent.get("pages"),
+                 snap=ent.get("snap"))
+    return meta
+
+
 class CheckpointManager:
     """save-every-N, keep-last-K manager with atomic writes and
     latest-checkpoint discovery (restart/resume)."""

@@ -22,7 +22,8 @@ import jax
 from repro.configs import get_config, get_smoke_config
 from repro.models import transformer as T
 from repro.serve import PersonalizationConfig, ServeEngine
-from repro.serve.engine import (make_random_requests,
+from repro.serve.engine import (make_branching_prefix_requests,
+                                make_random_requests,
                                 make_shared_prefix_requests)
 
 
@@ -48,12 +49,21 @@ def build_engine(args, cfg=None):
         temperature=args.temperature, eos_id=args.eos_id, seed=args.seed,
         page_size=args.page_size, num_pages=args.num_pages,
         prefix_sharing=not args.no_prefix_sharing,
+        prefix_mode=args.prefix_mode,
+        prefix_persist=args.prefix_persist,
         personalization=p13n)
     return cfg, engine
 
 
 def build_requests(args, cfg):
-    if args.shared_prefix_len > 0:
+    if getattr(args, "branching_prefix", False):
+        reqs = make_branching_prefix_requests(
+            cfg, args.requests, args.prompt_len, args.gen_len,
+            page_size=args.page_size,
+            max_prefix_pages=max(1, (args.prompt_len - 1) // args.page_size
+                                 - 1),
+            seed=args.seed)
+    elif args.shared_prefix_len > 0:
         reqs = make_shared_prefix_requests(
             cfg, args.requests, args.shared_prefix_len, args.prompt_len,
             args.gen_len, seed=args.seed)
@@ -87,9 +97,21 @@ def add_serve_args(ap: argparse.ArgumentParser):
                          "per request, i.e. contiguous-equivalent)")
     ap.add_argument("--no-prefix-sharing", action="store_true",
                     help="disable cross-request prompt-prefix page sharing")
+    ap.add_argument("--prefix-mode", choices=("radix", "chain", "off"),
+                    default="radix",
+                    help="prefix-reuse structure: radix tree with state "
+                         "snapshots + spill (default), legacy chain-hash "
+                         "baseline, or off")
+    ap.add_argument("--prefix-persist", type=str, default=None,
+                    help="directory for the persistent prefix tree: the "
+                         "spill tier is saved there after each run and "
+                         "restored at engine start (radix mode only)")
     ap.add_argument("--shared-prefix-len", type=int, default=0,
                     help="> 0: requests share a common prompt prefix of "
                          "this many tokens (system-prompt workload)")
+    ap.add_argument("--branching-prefix", action="store_true",
+                    help="partially-overlapping (zipf-branching) prefix "
+                         "workload instead of uniform-random prompts")
     ap.add_argument("--timeout-s", type=float, default=None,
                     help="per-request wall-clock deadline")
     ap.add_argument("--stream", action="store_true",
@@ -127,6 +149,12 @@ def main(argv=None):
           f"(util {stats.page_util:.2f}), "
           f"prefix hit rate {stats.prefix_hit_rate:.2f}, "
           f"{stats.cow_splits} COW splits")
+    if stats.prefix_mode == "radix":
+        print(f"[serve] radix: {stats.radix_nodes} nodes, "
+              f"snapshot hit rate {stats.snapshot_hit_rate:.2f} "
+              f"({stats.snapshots_stored} stored), "
+              f"{stats.spills} spills / {stats.rehydrates} rehydrates, "
+              f"{stats.spill_entries} tier entries")
     if args.users > 0:
         print(f"[serve] personalization: {args.users} users, "
               f"{stats.train_waves} train waves "

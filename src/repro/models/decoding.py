@@ -7,8 +7,32 @@ ys = cache_out).
 
 Sliding-window attention layers keep ring-buffer caches of size `window`
 (gemma local layers cache 1024 slots even at 500k context). SSM layers
-(mamba/rwkv) cache O(1) recurrent state. This is why long_500k is only
-runnable for ssm/hybrid/local archs — see DESIGN §Arch-applicability.
+(mamba/rwkv) cache O(1) recurrent state, which keeps long_500k runnable
+for ssm/hybrid/local archs — see DESIGN §Arch-applicability.
+
+Cache families and prefix reuse
+-------------------------------
+Every mixer's serve cache plays one of three roles (`_paged_layout`):
+`paged` (window-free attention — token rows live in shared page pools),
+`ring` (sliding-window attention — per-slot ring buffers), and `state`
+(mamba/rwkv — per-slot O(1) recurrent state). ALL THREE participate in
+prompt-prefix reuse, each through its family's unit of reuse
+(`CACHE_FAMILIES`):
+
+- paged layers share their token pages directly (refcounts + COW in
+  `serve/paging.py`) — reuse is position-addressed, any page boundary.
+- ring and state layers are NOT position-addressed, so their unit of
+  reuse is a *snapshot*: the per-row cache leaves (`snapshot_leaves`)
+  copied to host at a page-aligned prefill boundary and restored by
+  `cache_insert_row` at admission. A restored snapshot is bit-exact
+  because chunked prefill always advances in page-sized steps from
+  position 0 — identical prefixes replay identical chunk boundaries.
+
+`cache_extract_row` / `cache_insert_row` are the family-uniform
+snapshot/restore ops: they tree-map over whatever leaves a family keeps,
+so the prefix cache never inspects family internals. `has_state_layers`
+tells the engine whether a config needs snapshots at all;
+`snapshot_row_bytes` prices one snapshot for budget accounting.
 """
 from __future__ import annotations
 
@@ -16,6 +40,7 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import layers as L
 from repro.models import mamba as M
@@ -162,14 +187,62 @@ def has_paged_layers(cfg) -> bool:
                for _, role in _paged_layout(cfg, seg.kind))
 
 
-def supports_prefix_sharing(cfg) -> bool:
-    """Prompt-prefix K/V reuse skips prefill compute, which is only sound
-    when EVERY layer's cache is position-addressed (paged): ring and
-    recurrent state at the resume point is not reconstructable from pages."""
-    return (not cfg.embed_inputs) and all(
-        role == "paged"
-        for seg in T.segment_layout(cfg)
-        for _, role in _paged_layout(cfg, seg.kind))
+def has_state_layers(cfg) -> bool:
+    """True when any mixer keeps non-position-addressed cache (ring or
+    recurrent state) — prefix reuse for these configs needs recurrent-state
+    snapshots at page boundaries, not just shared pages."""
+    return any(role != "paged"
+               for seg in T.segment_layout(cfg)
+               for _, role in _paged_layout(cfg, seg.kind))
+
+
+class CacheFamily:
+    """One cache role's contract with the prefix-reuse stack: what its
+    per-row reuse unit looks like. `snapshot_leaves(cfg, kind, sub, max_len,
+    dtype)` returns a nested dict of (shape, dtype) specs — the leaves
+    `cache_extract_row` yields for one slot of this family (empty for
+    `paged`, whose unit of reuse is the shared page itself). Snapshot and
+    restore are family-uniform (`cache_extract_row`/`cache_insert_row`
+    tree-map over the live leaves), so this protocol only *prices and
+    describes* the blob; it never moves data."""
+
+    def __init__(self, role: str, leaves):
+        self.role = role
+        self._leaves = leaves
+
+    def snapshot_leaves(self, cfg, kind: str, sub: int, max_len: int, dtype):
+        return self._leaves(cfg, kind, sub, max_len, dtype)
+
+
+CACHE_FAMILIES = {
+    "paged": CacheFamily("paged", lambda cfg, kind, sub, max_len, dt: {}),
+    "ring": CacheFamily(
+        "ring", lambda cfg, kind, sub, max_len, dt:
+        L.ring_snapshot_leaves(cfg, T._window_for(cfg, kind, sub), max_len,
+                               dtype=dt)),
+    "state": CacheFamily(
+        "state", lambda cfg, kind, sub, max_len, dt:
+        R.rwkv_snapshot_leaves(cfg, dt) if kind == "rwkv"
+        else M.mamba_snapshot_leaves(cfg, dt)),
+}
+
+
+def snapshot_row_bytes(cfg, max_len: int) -> int:
+    """Host bytes of ONE slot's recurrent-state snapshot (every non-paged
+    mixer's leaves across all scan steps) — the budget unit for the prefix
+    cache's snapshot LRU."""
+    dt = _cache_dtype(cfg)
+    total = 0
+    for seg in T.segment_layout(cfg):
+        for i, (_, role) in enumerate(_paged_layout(cfg, seg.kind)):
+            leaves = CACHE_FAMILIES[role].snapshot_leaves(
+                cfg, seg.kind, i, max_len, dt)
+            for shape, leaf_dt in jax.tree.leaves(
+                    leaves, is_leaf=lambda x: isinstance(x, tuple)
+                    and len(x) == 2 and isinstance(x[0], tuple)):
+                total += seg.steps * int(np.prod(shape)) \
+                    * jnp.dtype(leaf_dt).itemsize
+    return total
 
 
 def _serve_leaf(cfg, role: str, batch: int, max_len: int, kind: str,
@@ -223,6 +296,21 @@ def copy_pool_rows(pools, src_row, dst_row, n: int):
         rows = jax.lax.dynamic_slice_in_dim(a, src_row, n, axis=1)
         return jax.lax.dynamic_update_slice_in_dim(a, rows, dst_row, axis=1)
     return jax.tree.map(cp, pools)
+
+
+def read_pool_rows(pools, src_row, n: int):
+    """Slice `n` physical token rows out of EVERY layer's pool — the device
+    half of spilling an evicted prefix page to the host tier."""
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_slice_in_dim(a, src_row, n, axis=1), pools)
+
+
+def write_pool_rows(pools, rows, dst_row):
+    """Write a `read_pool_rows`-shaped tree back into EVERY layer's pool at
+    physical row `dst_row` — the device half of rehydrating a spilled page."""
+    return jax.tree.map(
+        lambda a, r: jax.lax.dynamic_update_slice_in_dim(
+            a, r.astype(a.dtype), dst_row, axis=1), pools, rows)
 
 
 def _delta_sub(delta, *path):

@@ -513,6 +513,18 @@ def init_kv_cache(cfg, batch: int, seq_len: int, *, window: int = 0, dtype=None)
     }
 
 
+def ring_snapshot_leaves(cfg, window: int, max_len: int, dtype=None):
+    """Per-row (shape, dtype) spec of a ring layer's serve-cache state — the
+    snapshot unit a prefix cache stores at a page boundary. The serve ring
+    leaf carries no per-row `pos` (position is the engine's slot.pos), so
+    the snapshot is the k/v buffers only."""
+    hd = cfg.resolved_head_dim
+    size = min(window, max_len)
+    dt = dtype or jnp.dtype(cfg.dtype)
+    return {"k": ((size, cfg.num_kv_heads, hd), dt),
+            "v": ((size, cfg.num_kv_heads, hd), dt)}
+
+
 # ---------------------------------------------------------------------------
 # MLPs
 # ---------------------------------------------------------------------------

@@ -181,3 +181,10 @@ def init_mamba_cache(cfg, batch: int, dtype):
         "h": jnp.zeros((batch, d_inner(cfg), cfg.ssm.d_state), jnp.float32),
         "conv": jnp.zeros((batch, cfg.ssm.d_conv - 1, d_inner(cfg)), dtype),
     }
+
+
+def mamba_snapshot_leaves(cfg, dtype):
+    """Per-row (shape, dtype) spec of the mamba recurrent state — the ssm
+    carry `h` plus the depthwise-conv tail — as a prefix-cache snapshot."""
+    return {"h": ((d_inner(cfg), cfg.ssm.d_state), jnp.float32),
+            "conv": ((cfg.ssm.d_conv - 1, d_inner(cfg)), jnp.dtype(dtype))}

@@ -173,3 +173,15 @@ def init_rwkv_cache(cfg, batch: int, dtype):
                  "last": jnp.zeros((batch, cfg.d_model), dtype)},
         "chan": {"last": jnp.zeros((batch, cfg.d_model), dtype)},
     }
+
+
+def rwkv_snapshot_leaves(cfg, dtype):
+    """Per-row (shape, dtype) spec of the rwkv6 recurrent state — the wkv
+    matrix state S plus the token-shift `last` vectors — as a prefix-cache
+    snapshot."""
+    hd = cfg.rwkv.head_dim
+    h = num_heads(cfg)
+    dt = jnp.dtype(dtype)
+    return {"time": {"s": ((h, hd, hd), jnp.float32),
+                     "last": ((cfg.d_model,), dt)},
+            "chan": {"last": ((cfg.d_model,), dt)}}

@@ -18,12 +18,18 @@ Per-layer caches split into two trees (``models/decoding.py``):
   reserves pages as it grows instead of ``max_len`` contiguous rows.
 
 Pages are refcounted (``paging.PagePool``): a live request holds one
-reference per table entry, the prefix cache one per registered entry, and
+reference per table entry, the prefix cache one per node-owned page, and
 any write into a page with refcount > 1 first COW-splits it. Prompt-prefix
-sharing keys whole prompt-token pages by rolling crc32 chain hash (plus at
-most one partial continuation per chain) and is enabled only for fully-
-paged archs — ring/recurrent state at a resume point cannot be
-reconstructed from pages.
+sharing (``paging.RadixPrefixCache``) keys reuse by token content in a
+radix tree over pages, so requests share arbitrary page-aligned prefixes
+up to their divergence point — and EVERY cache family participates: paged
+layers share the pages themselves, while ring/recurrent state is captured
+as host snapshots at page boundaries during prefill and restored at
+admission (``models/decoding.py`` CacheFamily). Evicted tree nodes spill
+to a host LRU tier (``paging.SpillTier``) that outlives ``run()`` and,
+via ``checkpoint/manager.py`` + ``--prefix-persist``, engine restarts.
+The legacy whole-chain hash design survives as ``ChainPrefixCache``
+(``prefix_mode="chain"``), the radix tree's comparison baseline.
 
 Slot life cycle::
 
@@ -56,15 +62,18 @@ base model is never written.
 """
 from repro.serve.deltas import DeltaStore, PersonalizationConfig
 from repro.serve.engine import (RequestResult, ServeEngine, ServeStats,
+                                make_branching_prefix_requests,
                                 make_random_requests,
                                 make_shared_prefix_requests)
-from repro.serve.paging import PagePool, PrefixCache
+from repro.serve.paging import (ChainPrefixCache, MatchResult, PagePool,
+                                RadixPrefixCache, SpillTier)
 from repro.serve.sampling import sample_token
 from repro.serve.scheduler import Request, Scheduler, Slot, SlotState
 
 __all__ = [
-    "DeltaStore", "PagePool", "PersonalizationConfig", "PrefixCache",
-    "Request", "RequestResult", "Scheduler", "ServeEngine", "ServeStats",
-    "Slot", "SlotState", "sample_token",
+    "ChainPrefixCache", "DeltaStore", "MatchResult", "PagePool",
+    "PersonalizationConfig", "RadixPrefixCache", "Request", "RequestResult",
+    "Scheduler", "ServeEngine", "ServeStats", "Slot", "SlotState",
+    "SpillTier", "sample_token", "make_branching_prefix_requests",
     "make_random_requests", "make_shared_prefix_requests",
 ]

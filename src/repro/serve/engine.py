@@ -7,9 +7,11 @@ One engine iteration:
    counters.
 2. *Admission*: while a FREE slot and a queued request exist AND the page
    pool can cover the request's worst-case page need, bind the request to
-   the slot. Prompt-prefix sharing (fully-paged archs only) attaches cached
-   pages — chain-hashed whole prompt pages plus at most one partial
-   continuation — so the matched prefix tokens are never recomputed.
+   the slot. Prompt-prefix sharing (every cache family) attaches cached
+   pages from the radix tree — and, for archs with ring/recurrent state,
+   restores the recurrent-state snapshot at the deepest matched page
+   boundary — so the matched prefix tokens are never recomputed. The
+   match stays pinned in the tree until the slot closes.
 3. *Chunked prefill*: every PREFILL slot advances by ONE page-sized chunk
    through the same ``paged_step`` the decode uses (B=1), so a long prompt
    admission never stalls in-flight decodes. The final chunk's logits yield
@@ -24,6 +26,13 @@ every layer's pool). The canonical trigger: a request registers its
 partially-filled last prompt page, then COWs it on its first decode write,
 leaving the cached page frozen at prompt-only content.
 
+Prefix reuse modes (`prefix_mode`): "radix" (default) is the radix tree
+over token pages with recurrent-state snapshots and the host spill tier —
+evicted/ended trees survive across `run()` calls and, with
+`prefix_persist`, across engine restarts. "chain" is the legacy flat
+chain-hash baseline (fully-paged archs only, dies with `run()`), kept for
+comparison. "off" disables sharing entirely.
+
 PRNG: the engine key is split every step, so temperature sampling and the
 placeholder-embeds input path (``cfg.embed_inputs`` frontends) never reuse
 a key across steps.
@@ -31,6 +40,7 @@ a key across steps.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 import zlib
 from typing import Optional
@@ -39,14 +49,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.manager import restore_spill_tier, save_spill_tier
 from repro.models import decoding as D
 from repro.serve.deltas import DeltaStore, PersonalizationConfig
-from repro.serve.paging import PagePool, PrefixCache
+from repro.serve.paging import (ChainPrefixCache, PagePool, RadixPrefixCache,
+                                SpillTier)
 from repro.serve.sampling import sample_token
 from repro.serve.scheduler import Request, Scheduler, Slot, SlotState
 
 __all__ = ["RequestResult", "ServeEngine", "ServeStats",
-           "make_random_requests", "make_shared_prefix_requests"]
+           "make_random_requests", "make_shared_prefix_requests",
+           "make_branching_prefix_requests"]
+
+
+def _graft_like(tpl, blob):
+    """Re-attach empty subtrees that checkpoint serialization drops: walk
+    the template's dict skeleton and take `blob`'s value wherever the
+    template has leaves below. Host trees only (structure work, no data)."""
+    if isinstance(tpl, dict):
+        return {k: _graft_like(v, blob.get(k, {}) if isinstance(blob, dict)
+                               else {}) for k, v in tpl.items()}
+    return blob
 
 
 @dataclasses.dataclass
@@ -75,6 +98,15 @@ class ServeStats:
     pages_peak: int         # peak pages in use (sharing lowers this)
     cow_splits: int
     results: dict           # rid -> RequestResult
+    # prefix-reuse internals (zero when prefix_mode != "radix")
+    prefix_mode: str = "off"
+    prefix_lookups: int = 0         # admission-time cache lookups
+    radix_nodes: int = 0            # tree nodes at end of run
+    snapshot_hits: int = 0          # matches that restored recurrent state
+    snapshots_stored: int = 0
+    spills: int = 0                 # entries written to the host spill tier
+    rehydrates: int = 0             # spilled entries re-attached on match
+    spill_entries: int = 0          # tier size at end of run
     # per-user personalization (all zero when the engine has none)
     delta_hits: int = 0             # delta-store admissions that hit
     delta_lookups: int = 0          # delta-store admissions total
@@ -94,6 +126,10 @@ class ServeStats:
         return self.pages_peak / max(1, self.pages_total)
 
     @property
+    def snapshot_hit_rate(self) -> float:
+        return self.snapshot_hits / max(1, self.prefix_lookups)
+
+    @property
     def delta_hit_rate(self) -> float:
         return self.delta_hits / max(1, self.delta_lookups)
 
@@ -110,8 +146,13 @@ class ServeEngine:
                  temperature: float = 0.0, eos_id: Optional[int] = None,
                  seed: int = 0, page_size: int = 16,
                  num_pages: Optional[int] = None, prefix_sharing: bool = True,
+                 prefix_mode: str = "radix",
+                 prefix_persist: Optional[str] = None,
+                 spill_entries: int = 4096, snapshot_budget: int = 256,
+                 max_tree_nodes: int = 4096,
                  personalization: Optional[PersonalizationConfig] = None):
         assert num_slots >= 1 and max_len >= 2 and page_size >= 1
+        assert prefix_mode in ("radix", "chain", "off")
         self.cfg = cfg
         self.params = params
         self.num_slots = num_slots
@@ -119,6 +160,7 @@ class ServeEngine:
         self.page_size = page_size
         self.max_pages = -(-max_len // page_size)
         self.has_pages = D.has_paged_layers(cfg)
+        self._need_state = D.has_state_layers(cfg)
         # default pool = contiguous capacity (num_slots full-length tables);
         # prefix sharing makes the PEAK usage come in under it. State-only
         # archs (rwkv) have no paged layers and no pool at all.
@@ -127,7 +169,33 @@ class ServeEngine:
         else:
             self.num_pages = num_pages if num_pages is not None else \
                 num_slots * self.max_pages
-        self.prefix_sharing = prefix_sharing and D.supports_prefix_sharing(cfg)
+        # Placeholder-embeds frontends have no token identity to key reuse
+        # on; the chain baseline additionally needs every layer paged (it
+        # has no snapshots to cover ring/recurrent state).
+        if not prefix_sharing or cfg.embed_inputs:
+            prefix_mode = "off"
+        elif prefix_mode == "chain" and (self._need_state
+                                         or not self.has_pages):
+            prefix_mode = "off"
+        self.prefix_mode = prefix_mode
+        self.prefix_sharing = prefix_mode != "off"
+        self.snapshot_budget = snapshot_budget
+        self.max_tree_nodes = max_tree_nodes
+        # ONE spill tier per engine, shared by every run()'s tree: prefix
+        # state survives pool teardown (and, with prefix_persist, restarts)
+        self._spill = SpillTier(spill_entries) \
+            if prefix_mode == "radix" else None
+        self._persist_path = None
+        if prefix_persist is not None and self._spill is not None:
+            os.makedirs(prefix_persist, exist_ok=True)
+            self._persist_path = os.path.join(prefix_persist,
+                                              "prefix_tree.ckpt")
+            if os.path.exists(self._persist_path):
+                meta = restore_spill_tier(self._persist_path, self._spill)
+                if (meta.get("page_size") != page_size
+                        or meta.get("max_len") != max_len
+                        or meta.get("model") != cfg.name):
+                    self._spill.clear()     # incompatible tree: start cold
         self.temperature = float(temperature)
         self.eos_id = eos_id
         self._key = jax.random.PRNGKey(seed)
@@ -143,6 +211,9 @@ class ServeEngine:
         self._reset = jax.jit(D.cache_reset_row)
         self._copy = jax.jit(
             lambda pools, src, dst: D.copy_pool_rows(pools, src, dst, ps))
+        self._read_rows = jax.jit(
+            lambda pools, src: D.read_pool_rows(pools, src, ps))
+        self._write_rows = jax.jit(D.write_pool_rows)
         self._sample = jax.jit(
             lambda logits, key: sample_token(logits, key, self.temperature))
 
@@ -396,11 +467,31 @@ class ServeEngine:
                 self._pt[slot.index, pg] = new
         return pools
 
+    def _page_reader(self, pid: int):
+        """Device -> host: one page's token rows from EVERY layer's pool
+        (the radix cache's spill callback)."""
+        return jax.device_get(
+            self._read_rows(self._pools, pid * self.page_size))
+
+    def _page_writer(self, pid: int, blob) -> None:
+        """Host -> device: write a spilled page's rows back into EVERY
+        layer's pool (the radix cache's rehydrate callback). Grafts the
+        blob onto the live pool structure first — disk roundtrips drop
+        empty subtrees."""
+        blob = _graft_like(self._pools, blob)
+        self._pools = self._write_rows(
+            self._pools, jax.tree.map(jnp.asarray, blob),
+            pid * self.page_size)
+
     def _release_slot(self, slot: Slot):
         for pid in slot.page_ids:
             self._pool.decref(pid)
         slot.page_ids = []
         slot.registered_pages = 0
+        if slot.match is not None:
+            if self._cache is not None:
+                self._cache.release(slot.match)
+            slot.match = None
         self._pt[slot.index, :] = -1
 
     # -- serve loop --------------------------------------------------------
@@ -419,12 +510,22 @@ class ServeEngine:
         for r in requests:
             sched.submit(r)
 
-        state, pools = D.init_serve_cache(
+        state, self._pools = D.init_serve_cache(
             self.cfg, self.num_slots, self.max_len,
             max(1, self.num_pages), self.page_size)
         self._pt = np.full((self.num_slots, self.max_pages), -1, np.int32)
         self._pool = PagePool(max(1, self.num_pages), self.page_size)
-        self._cache = PrefixCache(self._pool) if self.prefix_sharing else None
+        if self.prefix_mode == "radix":
+            self._cache = RadixPrefixCache(
+                self._pool, has_pages=self.has_pages,
+                reader=self._page_reader if self.has_pages else None,
+                writer=self._page_writer if self.has_pages else None,
+                spill=self._spill, snapshot_budget=self.snapshot_budget,
+                max_nodes=self.max_tree_nodes)
+        elif self.prefix_mode == "chain":
+            self._cache = ChainPrefixCache(self._pool)
+        else:
+            self._cache = None
         if self._p13n is not None:
             self._dbatch = self._delta_batch_zeros()
             self._duser = [None] * self.num_slots
@@ -468,7 +569,7 @@ class ServeEngine:
             # queue head without disturbing FIFO order)
             while (adm := sched.peek_admission()) is not None:
                 slot, req = adm
-                matched, covered = [], 0
+                mr, matched, covered = None, [], 0
                 # personalized requests compute K/V under their own delta:
                 # sharing those pages (or adopting shared ones) would serve
                 # another user's prefix from the wrong weights
@@ -476,14 +577,16 @@ class ServeEngine:
                         and req.user is None:
                     # leave >= 1 prompt token uncached: something must
                     # produce the logits that sample the first token
-                    matched, covered = self._cache.match(
-                        np.asarray(req.tokens), req.prompt_len - 1)
+                    mr = self._cache.match(
+                        np.asarray(req.tokens), req.prompt_len - 1,
+                        need_state=self._need_state)
+                    matched, covered = mr.pages, mr.covered
                 has_partial = bool(matched) and matched[-1][1] < self.page_size
                 need = self._pages_needed(req) - len(matched) + int(has_partial)
                 if self.has_pages and self._headroom(sched) < need:
-                    if matched:                     # roll the match back
-                        self._cache.abandon(matched, req.prompt_len)
-                        matched, covered = [], 0
+                    if mr is not None:              # roll the match back
+                        self._cache.abandon(mr, req.prompt_len)
+                        mr, matched, covered = None, [], 0
                     if sched.live_slots():
                         break       # retry when an in-flight request frees pages
                     # nothing in flight will ever free pages: admit WITHOUT
@@ -491,11 +594,19 @@ class ServeEngine:
                     # evictable, so pages_needed <= num_pages always fits
                     assert self._headroom(sched) >= self._pages_needed(req)
                 sched.commit_admission(slot, prefilled=covered)
+                slot.match = mr     # pinned until the slot closes
                 slot.page_ids = [pid for pid, _ in matched]
                 slot.registered_pages = len(matched) - int(has_partial)
                 self._pt[slot.index, :] = -1
                 self._pt[slot.index, :len(matched)] = slot.page_ids
-                state = self._reset(state, slot.index)
+                if mr is not None and mr.snapshot is not None:
+                    # restore the recurrent state at the matched boundary;
+                    # prefill resumes from slot.pos = covered
+                    blob = _graft_like(state, mr.snapshot)
+                    state = self._insert(
+                        state, jax.tree.map(jnp.asarray, blob), slot.index)
+                else:
+                    state = self._reset(state, slot.index)
                 if self._p13n is not None:
                     if req.user is not None:
                         entry = self._deltas.admit(req.user)
@@ -511,11 +622,15 @@ class ServeEngine:
             # 3) chunked prefill: one page-sized chunk per PREFILL slot
             for slot in sched.prefill_slots():
                 req = slot.request
+                shareable = (self._cache is not None
+                             and req.tokens is not None and req.user is None)
                 # chunk-time adoption: a page a CONCURRENT slot registered
                 # since our admission can be attached instead of recomputed
-                # (same-wave admissions of a common prefix share this way)
-                while (self._cache is not None and req.tokens is not None
-                       and req.user is None
+                # (same-wave admissions of a common prefix share this way).
+                # State archs skip it: adopting K/V rows without restoring
+                # the recurrent state at that boundary would skip the state
+                # those tokens should have produced.
+                while (shareable and not self._need_state
                        and slot.pos % self.page_size == 0
                        and slot.pos + self.page_size <= req.prompt_len - 1
                        and slot.pos // self.page_size == len(slot.page_ids)):
@@ -528,30 +643,41 @@ class ServeEngine:
                     slot.pos += self.page_size
                     slot.registered_pages = len(slot.page_ids)
                 size = min(self.page_size, req.prompt_len - slot.pos)
-                pools = self._ensure_writable(
-                    slot, slot.pos, slot.pos + size, pools)
+                self._pools = self._ensure_writable(
+                    slot, slot.pos, slot.pos + size, self._pools)
                 st_row = self._extract(state, slot.index)
                 pt_row = jnp.asarray(self._pt[slot.index:slot.index + 1])
                 d_row = None if self._dbatch is None else \
                     self._extract(self._dbatch, slot.index)
-                logits, st_row, pools = self._step(
+                logits, st_row, self._pools = self._step(
                     self.params, self._chunk_batch(req, slot.pos, size),
-                    st_row, pools, pt_row, d_row)
+                    st_row, self._pools, pt_row, d_row)
                 state = self._insert(state, st_row, slot.index)
                 slot.pos += size
                 prefill_chunks += 1
-                if self._cache is not None and req.tokens is not None \
-                        and req.user is None:
-                    slot.registered_pages = self._cache.register_full(
+                if shareable and self.has_pages:
+                    slot.registered_pages = self._cache.insert_pages(
                         np.asarray(req.tokens),
                         min(slot.pos, req.prompt_len) // self.page_size,
                         slot.page_ids, slot.registered_pages)
+                if (shareable and self._need_state and slot.pos > 0
+                        and slot.pos % self.page_size == 0
+                        and self._cache.wants_snapshot(
+                            np.asarray(req.tokens), slot.pos)):
+                    # recurrent state at this page boundary, copied to host:
+                    # the snapshot that lets a later shared-prefix request
+                    # resume from here instead of re-prefilling
+                    blob = jax.tree.map(
+                        np.asarray,
+                        jax.device_get(self._extract(state, slot.index)))
+                    self._cache.insert_snapshot(
+                        np.asarray(req.tokens), slot.pos, blob)
                 if slot.pos == req.prompt_len:
                     sched.finish_prefill(slot)
-                    if self._cache is not None and req.tokens is not None \
-                            and req.user is None \
+                    if shareable and self.has_pages \
+                            and not self._need_state \
                             and self._headroom(sched) >= 1:
-                        self._cache.register_partial(
+                        self._cache.insert_partial(
                             np.asarray(req.tokens), slot.page_ids[-1])
                     first = int(self._sample(logits, self._sample_key())[0])
                     outcome = sched.record_token(slot, first)
@@ -573,15 +699,15 @@ class ServeEngine:
             # 4) one decode step over the full fixed-shape batch; each slot
             # consumes its last sampled token at position slot.pos
             for slot in active:
-                pools = self._ensure_writable(
-                    slot, slot.pos, slot.pos + 1, pools)
+                self._pools = self._ensure_writable(
+                    slot, slot.pos, slot.pos + 1, self._pools)
             tokens_row = [s.last_token for s in sched.slots]
             pos_row = [min(s.pos, self.max_len - 1) for s in sched.slots]
             active_row = [s.state is SlotState.ACTIVE for s in sched.slots]
-            logits, state, pools = self._step(
+            logits, state, self._pools = self._step(
                 self.params,
                 self._decode_batch(tokens_row, pos_row, active_row),
-                state, pools, jnp.asarray(self._pt), self._dbatch)
+                state, self._pools, jnp.asarray(self._pt), self._dbatch)
             toks = np.asarray(self._sample(logits, self._sample_key()))
             for slot in active:           # inactive rows: sampled, discarded
                 slot.pos += 1             # the fed token is now cached
@@ -590,9 +716,21 @@ class ServeEngine:
                     close(slot, "completed" if outcome == "done"
                           else "cancelled")
 
+        if self.prefix_mode == "radix" and self._cache is not None:
+            # write the whole tree (pages + snapshots) into the host tier
+            # while the device pools are still alive, so the NEXT run (or a
+            # restarted engine, via prefix_persist) rehydrates hot prefixes
+            # instead of starting cold
+            self._cache.spill_all()
+            if self._persist_path is not None:
+                save_spill_tier(self._persist_path, self._spill,
+                                meta={"page_size": self.page_size,
+                                      "max_len": self.max_len,
+                                      "model": self.cfg.name})
         wall = time.perf_counter() - t0
         lat = [r.latency_s for r in results.values()
                if r.status == "completed"] or [0.0]
+        c = self._cache
         return ServeStats(
             requests_completed=sched.requests_completed,
             requests_cancelled=sched.requests_cancelled,
@@ -604,14 +742,20 @@ class ServeEngine:
             latency_p95_s=float(np.percentile(lat, 95)),
             refills=sched.refills,
             prefill_chunks=prefill_chunks,
-            prefix_hit_tokens=(self._cache.hit_tokens
-                               if self._cache is not None else 0),
-            prefix_lookup_tokens=(self._cache.lookup_tokens
-                                  if self._cache is not None else 0),
+            prefix_hit_tokens=(c.hit_tokens if c is not None else 0),
+            prefix_lookup_tokens=(c.lookup_tokens if c is not None else 0),
             pages_total=self.num_pages,
             pages_peak=self._pool.peak_in_use,
             cow_splits=self._pool.cow_splits,
             results=results,
+            prefix_mode=self.prefix_mode,
+            prefix_lookups=(c.lookups if c is not None else 0),
+            radix_nodes=(c.node_count if c is not None else 0),
+            snapshot_hits=(c.snapshot_hits if c is not None else 0),
+            snapshots_stored=(c.snapshots_stored if c is not None else 0),
+            spills=(c.spills if c is not None else 0),
+            rehydrates=(c.rehydrates if c is not None else 0),
+            spill_entries=(len(self._spill) if self._spill is not None else 0),
             delta_hits=(self._deltas.hits if self._p13n is not None else 0),
             delta_lookups=(self._deltas.hits + self._deltas.misses
                            if self._p13n is not None else 0),
@@ -655,6 +799,39 @@ def make_shared_prefix_requests(cfg, n: int, prefix_len: int, prompt_len: int,
     for rid in range(n):
         tail = rng.integers(
             0, cfg.vocab_size, prompt_len - prefix_len).astype(np.int32)
+        reqs.append(Request(rid, gen_len,
+                            tokens=np.concatenate([prefix, tail])))
+    return reqs
+
+
+def make_branching_prefix_requests(cfg, n: int, prompt_len: int, gen_len: int,
+                                   *, page_size: int = 16,
+                                   max_prefix_pages: int = 4, branch: int = 2,
+                                   zipf_a: float = 1.5,
+                                   seed: int = 0) -> list[Request]:
+    """Partially-overlapping prefix workload: prompts walk a `branch`-ary
+    token tree with zipf-skewed branch popularity (few-shot preambles that
+    agree for a while, then diverge), so pairs of requests share SOME page-
+    aligned prefix but rarely the whole prompt. This is the workload where
+    the radix tree's arbitrary-prefix matching beats whole-chain hashing.
+    Page content at each tree position is keyed by the path to it, so equal
+    paths yield identical tokens across requests (and across runs)."""
+    assert prompt_len > max_prefix_pages * page_size
+    rng = np.random.default_rng(seed)
+    w = 1.0 / np.arange(1, branch + 1) ** zipf_a
+    w /= w.sum()
+    reqs = []
+    for rid in range(n):
+        depth = 1 + int(rng.integers(0, max_prefix_pages))
+        path: list[int] = []
+        pages = []
+        for _ in range(depth):
+            path.append(int(rng.choice(branch, p=w)))
+            pages.append(np.random.default_rng([seed, *path]).integers(
+                0, cfg.vocab_size, page_size).astype(np.int32))
+        prefix = np.concatenate(pages)
+        tail = rng.integers(0, cfg.vocab_size,
+                            prompt_len - len(prefix)).astype(np.int32)
         reqs.append(Request(rid, gen_len,
                             tokens=np.concatenate([prefix, tail])))
     return reqs

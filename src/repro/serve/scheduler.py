@@ -83,6 +83,7 @@ class Slot:
     # engine-owned paging state for the current request
     page_ids: list = dataclasses.field(default_factory=list)
     registered_pages: int = 0  # prefix-cache registration watermark
+    match: Optional[object] = None  # pinned prefix-cache MatchResult
 
 
 class Scheduler:

@@ -7,11 +7,13 @@ token-identical to the contiguous batch=1 oracle (an explicit
 ``D.prefill`` + ``D.decode_step`` loop that never touches the paged code
 paths), across prompt lengths straddling page boundaries and through
 mid-stream cancellation. On top of that: page accounting (cancelled and
-timed-out requests never count), prefix sharing (hit rate > 0, LOWER page
-peak than no-sharing, COW splits on shared partial pages), slot-refill
-parity, the per-step PRNG split for placeholder embeds, sampling, the EOS
-hook, and the PR-2 satellite fixes (memory-budget solver warning, SIGINT
-opt-in preemption).
+timed-out requests never count), radix prefix sharing for EVERY family
+(hit rate > 0, LOWER page peak than no-sharing, COW splits on shared
+partial pages, recurrent-state snapshot restore token-identical to the
+no-sharing oracle, strict radix-vs-chain wins, spill-tier persistence
+across engine restarts), slot-refill parity, the per-step PRNG split for
+placeholder embeds, sampling, the EOS hook, and the PR-2 satellite fixes
+(memory-budget solver warning, SIGINT opt-in preemption).
 """
 import signal
 import warnings
@@ -25,7 +27,8 @@ from repro.configs import SparseUpdateConfig, get_smoke_config
 from repro.models import decoding as D
 from repro.models import transformer as T
 from repro.serve import Request, ServeEngine
-from repro.serve.engine import (make_random_requests,
+from repro.serve.engine import (make_branching_prefix_requests,
+                                make_random_requests,
                                 make_shared_prefix_requests)
 
 PROMPT_LEN = 16
@@ -291,15 +294,41 @@ def test_tight_pool_shared_prefix_cannot_deadlock():
     assert stats.prefix_hit_tokens <= stats.prefix_lookup_tokens
 
 
-def test_prefix_sharing_gated_to_fully_paged_archs():
-    """Ring/recurrent state at a resume point is not reconstructable from
-    pages: sharing must silently disable for those families."""
-    assert D.supports_prefix_sharing(get_smoke_config("llama3-8b"))
-    for arch in ("gemma3-4b", "rwkv6-3b", "jamba-1.5-large-398b",
-                 "musicgen-medium"):
-        assert not D.supports_prefix_sharing(get_smoke_config(arch)), arch
-    _, engine = _engine("gemma3-4b", num_slots=2, page_size=PAGE)
-    assert not engine.prefix_sharing
+def test_prefix_mode_resolution_all_families_share():
+    """The old fully-paged-only gate is gone: every cache family shares
+    prefixes through the radix tree (state families via page-boundary
+    snapshots). Only embed-input archs — no token identity to key on —
+    resolve to off, and the legacy chain baseline still gates itself to
+    fully-paged configs (it cannot snapshot recurrent state)."""
+    assert not D.has_state_layers(get_smoke_config("llama3-8b"))
+    for arch in ("gemma3-4b", "rwkv6-3b", "jamba-1.5-large-398b"):
+        assert D.has_state_layers(get_smoke_config(arch)), arch
+    for arch in FAMILY_ARCHS:
+        _, engine = _engine(arch, num_slots=2, page_size=PAGE)
+        assert engine.prefix_mode == "radix" and engine.prefix_sharing, arch
+    _, engine = _engine("musicgen-medium", num_slots=2, page_size=PAGE)
+    assert engine.prefix_mode == "off"
+    _, engine = _engine("llama3-8b", num_slots=2, page_size=PAGE,
+                        prefix_mode="chain")
+    assert engine.prefix_mode == "chain"
+    _, engine = _engine("rwkv6-3b", num_slots=2, page_size=PAGE,
+                        prefix_mode="chain")
+    assert engine.prefix_mode == "off"
+
+
+def test_snapshot_row_bytes_matches_extracted_row():
+    """CacheFamily byte accounting must equal the real nbytes of one
+    extracted per-slot state row — the snapshot LRU budgets on it."""
+    for arch in FAMILY_ARCHS:
+        cfg = get_smoke_config(arch)
+        state, _pools = D.init_serve_cache(cfg, 2, PROMPT_LEN + GEN_LEN,
+                                           num_pages=4, page_size=PAGE)
+        row = D.cache_extract_row(state, 0)
+        want = sum(np.asarray(leaf).nbytes for leaf in jax.tree.leaves(row))
+        got = D.snapshot_row_bytes(cfg, PROMPT_LEN + GEN_LEN)
+        assert got == want, f"{arch}: {got} != {want}"
+    assert D.snapshot_row_bytes(get_smoke_config("llama3-8b"),
+                                PROMPT_LEN + GEN_LEN) == 0
 
 
 def test_state_only_arch_uses_no_pages():
@@ -307,6 +336,154 @@ def test_state_only_arch_uses_no_pages():
     stats = engine.run(make_random_requests(cfg, 3, PROMPT_LEN, 4, seed=0))
     assert stats.requests_completed == 3
     assert stats.pages_total == 0 and stats.pages_peak == 0
+
+
+# ---------------------------------------------------------------------------
+# recurrent-state snapshots: state families share prefixes token-identically
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ("gemma3-4b", "rwkv6-3b",
+                                  "jamba-1.5-large-398b"))
+def test_state_family_prefix_parity_and_snapshot_hits(arch):
+    """Shared-prefix workload on the ring/state families: admissions must
+    restore page-boundary snapshots (hit rate > 0), skip prefill chunks,
+    and decode token-identically to the no-sharing run."""
+    cfg = get_smoke_config(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+
+    def run(sharing):
+        engine = ServeEngine(cfg, params, num_slots=2, max_len=20,
+                             page_size=PAGE, num_pages=16,
+                             prefix_sharing=sharing)
+        return engine.run(make_shared_prefix_requests(
+            cfg, 6, prefix_len=12, prompt_len=14, gen_len=5, seed=3))
+
+    shared, plain = run(True), run(False)
+    assert shared.snapshot_hits > 0 and shared.snapshot_hit_rate > 0
+    assert shared.snapshots_stored > 0
+    assert shared.prefix_hit_tokens > 0
+    assert shared.prefill_chunks < plain.prefill_chunks
+    assert shared.requests_completed == plain.requests_completed == 6
+    for rid in shared.results:
+        assert shared.results[rid].tokens == plain.results[rid].tokens, (
+            f"{arch}: snapshot restore changed decoded tokens")
+
+
+def test_cancel_while_snapshot_pinned_releases_cleanly():
+    """A request cancelled mid-stream still holds its admission pin (the
+    snapshot node) — cancellation must release it so the node stays
+    reusable AND evictable, and later identical requests decode exactly."""
+    cfg = get_smoke_config("rwkv6-3b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    toks = np.random.default_rng(3).integers(
+        0, cfg.vocab_size, 14).astype(np.int32)
+    engine = ServeEngine(cfg, params, num_slots=1, max_len=20,
+                         page_size=PAGE)
+    streamed = []
+
+    def cb(rid, tok):
+        streamed.append(tok)
+        return len(streamed) < 2
+
+    stats = engine.run([
+        Request(0, 5, tokens=toks.copy()),               # stores snapshots
+        Request(1, 5, tokens=toks.copy(), stream=cb),    # hit, then cancel
+        Request(2, 5, tokens=toks.copy()),               # hit, completes
+    ])
+    assert stats.snapshot_hits >= 2
+    assert stats.requests_cancelled == 1 and stats.requests_completed == 2
+    ref = _oracle_decode(cfg, params, toks, 5, 20)
+    assert stats.results[0].tokens == ref
+    assert stats.results[2].tokens == ref
+    assert streamed == ref[:2]
+
+
+# ---------------------------------------------------------------------------
+# radix vs chain: strictly more reuse on partially-overlapping workloads
+# ---------------------------------------------------------------------------
+
+def test_radix_strictly_beats_chain_attention_family():
+    """Acceptance: radix shows STRICTLY higher hit tokens and STRICTLY
+    fewer prefill chunks than the chain baseline on the zipf-branching
+    workload. The tree's host spill tier outlives run(), so a second wave
+    of the same workload rehydrates evicted prefixes; the chain baseline
+    rebuilds from scratch every run."""
+    cfg = get_smoke_config("llama3-8b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+
+    def wave():
+        return make_branching_prefix_requests(
+            cfg, 6, prompt_len=14, gen_len=4, page_size=PAGE,
+            max_prefix_pages=2, seed=5)
+
+    def two_waves(mode):
+        engine = ServeEngine(cfg, params, num_slots=2, max_len=20,
+                             page_size=PAGE, num_pages=16, prefix_mode=mode)
+        return engine.run(wave()), engine.run(wave())
+
+    (r1, r2) = two_waves("radix")
+    (c1, c2) = two_waves("chain")
+    assert r2.prefix_hit_tokens > c2.prefix_hit_tokens
+    assert r2.prefill_chunks < c2.prefill_chunks
+    assert r2.rehydrates > 0 and r1.spills > 0
+    for rid in r2.results:      # reuse must never change decoded tokens
+        assert r1.results[rid].tokens == r2.results[rid].tokens \
+            == c1.results[rid].tokens == c2.results[rid].tokens, rid
+
+
+def test_radix_strictly_beats_chain_state_family():
+    """Same acceptance bar for a state family: the chain design cannot
+    snapshot recurrent state (it resolves to off), the radix tree can."""
+    cfg = get_smoke_config("rwkv6-3b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+
+    def run(mode):
+        engine = ServeEngine(cfg, params, num_slots=2, max_len=20,
+                             page_size=PAGE, prefix_mode=mode)
+        assert engine.prefix_mode == ("off" if mode == "chain" else mode)
+        return engine.run(make_shared_prefix_requests(
+            cfg, 6, prefix_len=12, prompt_len=14, gen_len=4, seed=7))
+
+    radix, chain = run("radix"), run("chain")
+    assert radix.prefix_hit_tokens > chain.prefix_hit_tokens == 0
+    assert radix.prefill_chunks < chain.prefill_chunks
+    for rid in radix.results:
+        assert radix.results[rid].tokens == chain.results[rid].tokens, rid
+
+
+# ---------------------------------------------------------------------------
+# persistence: the spill tier survives engine restarts via --prefix-persist
+# ---------------------------------------------------------------------------
+
+def test_prefix_persist_survives_restart(tmp_path):
+    """A NEW engine pointed at the same persist dir must serve the first
+    repeated prompt with a prefix hit (rehydrated from the restored spill
+    tier), token-identical to a no-sharing engine; a meta mismatch (other
+    page size) must cold-start instead of corrupting."""
+    cfg = get_smoke_config("llama3-8b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+
+    def reqs():
+        return make_shared_prefix_requests(cfg, 3, prefix_len=8,
+                                           prompt_len=10, gen_len=4, seed=9)
+
+    def engine(page=PAGE):
+        return ServeEngine(cfg, params, num_slots=2, max_len=16,
+                           page_size=page, num_pages=16,
+                           prefix_persist=str(tmp_path))
+
+    first = engine().run(reqs())
+    assert first.spill_entries > 0          # run() end spilled the tree
+    second = engine().run(reqs())           # fresh engine, same dir
+    assert second.rehydrates > 0
+    assert second.prefix_hit_tokens > 0
+    plain = ServeEngine(cfg, params, num_slots=2, max_len=16,
+                        page_size=PAGE, num_pages=16,
+                        prefix_sharing=False).run(reqs())
+    for rid in second.results:
+        assert second.results[rid].tokens == plain.results[rid].tokens, rid
+    third = engine(page=2 * PAGE).run(reqs())
+    assert third.rehydrates == 0            # meta mismatch -> cold start
 
 
 # ---------------------------------------------------------------------------
