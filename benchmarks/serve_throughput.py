@@ -30,9 +30,24 @@ request (cancelled ones never train), asserted below.
 
 Warmup: one throwaway run triggers compilation so the timed run measures
 steady-state serving, not XLA.
+
+Chaos modes (CI smoke for the robustness layer):
+
+- `--fault-rate R --chaos-seed S` first serves the workload on a
+  fault-free oracle engine, then on an engine injecting deterministic
+  faults; completed requests must be TOKEN-IDENTICAL to the oracle, and
+  every submitted request must be accounted for (completed + cancelled +
+  quarantined, with a result recorded) — faults may delay requests but
+  can never corrupt them or drop them silently.
+- `--kill-after N` crashes the engine after N completed requests, then
+  restarts it against the same journal + persisted prefix tier: every
+  journaled in-flight request must complete token-identically on replay,
+  and the restarted run must report prefix hits > 0 (warm restart).
 """
 import argparse
+import os
 import sys
+import tempfile
 
 sys.path.insert(0, "src")
 
@@ -66,15 +81,89 @@ def _attach_users(requests, frac: float, num_users: int):
     return n_pers
 
 
+def _plain_ns(ns):
+    """`ns` with every chaos knob off: the fault-free oracle config."""
+    return argparse.Namespace(**{**vars(ns), "fault_rate": 0.0,
+                                 "kill_after": None, "journal": None})
+
+
+def _completed_tokens(stats):
+    return {r.rid: list(r.tokens) for r in stats.results.values()
+            if r.status == "completed"}
+
+
+def bench_crash_restart(ns, arch: str):
+    """--kill-after N: crash mid-run, restart against the same journal and
+    persisted prefix tier, and prove warm idempotent replay."""
+    from repro.runtime.chaos import InjectedCrash
+    tmp = tempfile.mkdtemp(prefix="serve-crash-")
+    if ns.journal is None:
+        ns.journal = os.path.join(tmp, "journal.jsonl")
+    if ns.prefix_persist is None:
+        ns.prefix_persist = os.path.join(tmp, "spill")
+    oracle_ns = argparse.Namespace(**{**vars(_plain_ns(ns)),
+                                      "prefix_persist": None})
+    cfg, oracle = build_engine(oracle_ns)
+    ref = _completed_tokens(oracle.run(build_requests(oracle_ns, cfg)))
+    cfg, engine = build_engine(ns)
+    try:
+        engine.run(build_requests(ns, cfg))
+        raise AssertionError("--kill-after never crashed (fewer requests "
+                             "completed than the kill threshold?)")
+    except InjectedCrash as e:
+        print(f"[{arch}] {e}")
+    engine._journal.close()
+    cfg, engine2 = build_engine(_plain_ns_keep_journal(ns))
+    pending = engine2.recover_requests()
+    assert pending, "crash left no journaled in-flight requests to replay"
+    stats = engine2.run(pending)
+    assert stats.requests_completed == len(pending), (
+        "a journaled in-flight request did not complete on replay")
+    assert stats.journal_replays == len(pending), (
+        "journal replay accounting diverged from re-admissions")
+    assert stats.prefix_hit_tokens > 0, (
+        "restart was cold: no prefix hits from the persisted spill tier")
+    for rid, toks in _completed_tokens(stats).items():
+        assert toks == ref[rid], (
+            f"rid {rid}: replayed tokens differ from the fault-free oracle")
+    print(f"[{arch}] crash-restart: {len(pending)} journaled requests "
+          f"replayed, {stats.journal_replays} journal_replays, "
+          f"prefix_hit_tokens={stats.prefix_hit_tokens} (warm restart)")
+    return stats
+
+
+def _plain_ns_keep_journal(ns):
+    out = _plain_ns(ns)
+    out.journal = ns.journal
+    return out
+
+
 def bench_one(args, arch: str):
     ns = argparse.Namespace(**{**vars(args), "arch": arch})
     if ns.personalize_frac > 0 and ns.users == 0:
         ns.users = 2            # personalization needs a user universe
+    if ns.kill_after is not None:
+        return bench_crash_restart(ns, arch)
+    chaos_mode = ns.fault_rate > 0.0
+    ref = None
+    if chaos_mode:
+        # fault-free oracle first: same workload, chaos knobs off. The
+        # oracle also absorbs compilation, so the chaos engine runs the
+        # exact same jitted shapes.
+        oracle_ns = _plain_ns(ns)
+        cfg, oracle = build_engine(oracle_ns)
+        oreqs = build_requests(oracle_ns, cfg)
+        if ns.personalize_frac > 0:
+            _attach_users(oreqs, ns.personalize_frac, ns.users)
+        ref = _completed_tokens(oracle.run(oreqs))
     cfg, engine = build_engine(ns)
-    # warmup: compile the step shapes outside the timed run
-    warm = argparse.Namespace(**{**vars(ns), "requests": min(2, ns.requests),
-                                 "seed": ns.seed + 1})
-    engine.run(build_requests(warm, cfg))
+    if not chaos_mode:
+        # warmup: compile the step shapes outside the timed run (skipped in
+        # chaos mode — a warmup run would consume fault draws)
+        warm = argparse.Namespace(**{**vars(ns),
+                                     "requests": min(2, ns.requests),
+                                     "seed": ns.seed + 1})
+        engine.run(build_requests(warm, cfg))
     requests = build_requests(ns, cfg)
     if ns.personalize_frac > 0:
         n_pers = _attach_users(requests, ns.personalize_frac, ns.users)
@@ -82,11 +171,32 @@ def bench_one(args, arch: str):
         n_pers = len(requests) if ns.users > 0 else 0
     n_cancel = _attach_cancels(requests, args.cancel_frac, args.gen_len)
     stats = engine.run(requests)
-    assert stats.requests_completed == len(requests) - n_cancel, (
-        "cancelled requests leaked into completed-request accounting")
-    if ns.users > 0:
+    if chaos_mode:
+        # graceful degradation contract: faults may delay or quarantine,
+        # never corrupt or silently drop
+        assert (stats.requests_completed + stats.requests_cancelled
+                + stats.quarantined == len(requests)), (
+            "request dropped without accounting under fault injection")
+        assert len(stats.results) == len(requests), (
+            "request left no result record under fault injection")
+        for rid, toks in _completed_tokens(stats).items():
+            assert toks == ref[rid], (
+                f"rid {rid}: tokens diverged from the fault-free oracle")
+        print(f"[{arch}] chaos: faults_injected={stats.faults_injected} "
+              f"by_kind={dict(stats.faults_by_kind)} "
+              f"retries={stats.retries} sheds={stats.sheds} "
+              f"quarantined={stats.quarantined} "
+              f"watchdog_kills={stats.watchdog_kills} "
+              f"stream_errors={stats.stream_errors} "
+              f"stragglers={stats.stragglers} (token parity vs oracle OK)")
+    else:
+        assert stats.requests_completed == len(requests) - n_cancel, (
+            "cancelled requests leaked into completed-request accounting")
+    if ns.users > 0 and not chaos_mode:
         # one online wave per COMPLETED personalized request, no more:
-        # cancels attach to the same request prefix as user ids
+        # cancels attach to the same request prefix as user ids (under
+        # chaos a quarantined personalized request legitimately skips its
+        # wave, so the exact count only holds fault-free)
         assert stats.train_waves == n_pers - min(n_cancel, n_pers), (
             "train-wave count diverged from completed personalized requests")
     print(f"[{arch}] requests_completed={stats.requests_completed} "

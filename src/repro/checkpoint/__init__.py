@@ -1,6 +1,9 @@
-from repro.checkpoint.manager import (CheckpointManager, load_pytree,
-                                      restore_delta_store, save_delta_store,
-                                      save_pytree)
+from repro.checkpoint.manager import (CheckpointCorruptError,
+                                      CheckpointManager, load_pytree,
+                                      restore_delta_store, restore_spill_tier,
+                                      save_delta_store, save_pytree,
+                                      save_spill_tier)
 
-__all__ = ["CheckpointManager", "save_pytree", "load_pytree",
-           "save_delta_store", "restore_delta_store"]
+__all__ = ["CheckpointCorruptError", "CheckpointManager", "save_pytree",
+           "load_pytree", "save_delta_store", "restore_delta_store",
+           "save_spill_tier", "restore_spill_tier"]

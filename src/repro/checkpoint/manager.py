@@ -1,17 +1,30 @@
-"""Fault-tolerant checkpointing: msgpack + zstd, atomic rename, retention,
-elastic reshard-on-load.
+"""Fault-tolerant checkpointing: msgpack + zstd, atomic rename, checksum
+manifest, corrupt-file fallback, retention, elastic reshard-on-load.
 
 Format: one `.ckpt` file per save — a zstd-compressed msgpack map of
 { "/"-joined tree path: {dtype, shape, raw bytes} } plus a `__meta__`
-entry. Leaves are stored as *logical* (unsharded) arrays, so a checkpoint
-written on one mesh restores onto any other mesh ("elastic"): the loader
-device_puts each leaf with the target sharding (or leaves it on host).
+entry, followed by an 8-byte checksum footer (crc32 of the compressed
+payload + magic). Leaves are stored as *logical* (unsharded) arrays, so a
+checkpoint written on one mesh restores onto any other mesh ("elastic"):
+the loader device_puts each leaf with the target sharding (or leaves it
+on host).
+
+Corruption discipline: a torn or bit-flipped file raises
+``CheckpointCorruptError`` (checksum mismatch, missing footer with a
+payload that fails to decompress/unpack, ...) instead of an opaque
+deserialization error, and ``CheckpointManager.restore`` catches it,
+warns, and falls back to the latest *intact* step — a half-written
+checkpoint degrades the restore by one save interval, it never crashes
+the restart. ``CheckpointManager(chaos=...)`` threads a
+``runtime.chaos.FaultSchedule`` through ``save`` so torn writes are
+injectable deterministically (fault kind ``torn``).
 
 At real multi-pod scale the same format shards per leaf across processes
 (each process writes its addressable shards, `index` entries describe the
 slices); the single-controller environment here writes logical arrays
-directly. The atomic tmp-file + rename protocol and the retention policy
-are the production behaviours that matter for restart correctness.
+directly. The atomic tmp-file + rename protocol, the checksum manifest,
+and the retention policy are the production behaviours that matter for
+restart correctness.
 """
 from __future__ import annotations
 
@@ -19,6 +32,7 @@ import os
 import re
 import threading
 import time
+import warnings
 from typing import Any, Optional
 
 import jax
@@ -34,6 +48,13 @@ import zlib
 
 _CKPT_RE = re.compile(r"step_(\d+)\.ckpt$")
 _ZLIB_MAGIC = b"ZLB0"        # our zlib-frame marker (zstd frames start 0x28b52ffd)
+_FOOTER_MAGIC = b"RCK1"      # checksum footer: crc32(payload) LE + magic
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint file failed its integrity check (torn write, truncated
+    file, bit flip). Restore paths catch this and fall back to the latest
+    intact step instead of crashing."""
 
 
 def _compress(raw: bytes) -> bytes:
@@ -69,22 +90,52 @@ def save_pytree(path: str, tree, meta: Optional[dict] = None):
                         "b": arr.tobytes()}
     raw = msgpack.packb(payload, use_bin_type=True)
     comp = _compress(raw)
+    footer = (zlib.crc32(comp) & 0xFFFFFFFF).to_bytes(4, "little") \
+        + _FOOTER_MAGIC
     tmp = path + f".tmp.{os.getpid()}"
     with open(tmp, "wb") as f:
-        f.write(comp)
+        f.write(comp + footer)
         f.flush()
         os.fsync(f.fileno())
     os.rename(tmp, path)  # atomic publish
+
+
+def _read_verified(path: str) -> bytes:
+    """Read a checkpoint file and verify its checksum footer. Files written
+    before the footer existed are accepted as-is (their decompress/unpack
+    stage still catches corruption)."""
+    with open(path, "rb") as f:
+        blob = f.read()
+    if len(blob) >= 8 and blob[-4:] == _FOOTER_MAGIC:
+        body, crc = blob[:-8], int.from_bytes(blob[-8:-4], "little")
+        if (zlib.crc32(body) & 0xFFFFFFFF) != crc:
+            raise CheckpointCorruptError(
+                f"{path}: checksum mismatch (torn write or bit flip)")
+        return body
+    return blob
 
 
 def load_pytree(path: str, target=None, shardings=None):
     """Load a checkpoint. If `target` (a pytree of like-structured arrays or
     ShapeDtypeStructs) is given, the result mirrors its structure; leaves are
     device_put with `shardings` (same-structure tree or None) — this is the
-    elastic reshard path."""
-    with open(path, "rb") as f:
-        raw = _decompress(f.read())
-    payload = msgpack.unpackb(raw, raw=False)
+    elastic reshard path. Torn/corrupt files raise
+    ``CheckpointCorruptError`` (checksum, decompression, or unpack failure),
+    never an opaque deserialization error."""
+    body = _read_verified(path)
+    if not body:
+        raise CheckpointCorruptError(f"{path}: empty checkpoint file "
+                                     "(torn write)")
+    try:
+        raw = _decompress(body)
+        payload = msgpack.unpackb(raw, raw=False)
+    except RuntimeError:
+        raise               # environment problem (e.g. zstd missing), not data
+    except Exception as e:
+        raise CheckpointCorruptError(
+            f"{path}: truncated or corrupt checkpoint ({e})") from e
+    if not isinstance(payload, dict):
+        raise CheckpointCorruptError(f"{path}: payload is not a map")
     meta = payload.pop("__meta__", {})
     arrays = {}
     for key, rec in payload.items():
@@ -193,12 +244,19 @@ def restore_spill_tier(path: str, tier):
 
 
 class CheckpointManager:
-    """save-every-N, keep-last-K manager with atomic writes and
-    latest-checkpoint discovery (restart/resume)."""
+    """save-every-N, keep-last-K manager with atomic writes, checksum
+    verification with fall-back-to-intact restore, and latest-checkpoint
+    discovery (restart/resume). `chaos` is an optional
+    ``runtime.chaos.FaultSchedule``: when its ``torn`` draws fire, `save`
+    publishes a deliberately truncated file instead of the real payload —
+    the deterministic stand-in for a crash mid-write on a non-atomic
+    filesystem, which `restore` must survive."""
 
-    def __init__(self, directory: str, keep: int = 3):
+    def __init__(self, directory: str, keep: int = 3, chaos=None):
         self.dir = directory
         self.keep = keep
+        self.chaos = chaos
+        self.torn_writes = 0
         os.makedirs(directory, exist_ok=True)
         self._lock = threading.Lock()
 
@@ -222,15 +280,45 @@ class CheckpointManager:
             meta = dict(meta or {})
             meta["step"] = int(step)
             meta["time"] = time.time()
-            save_pytree(self._path(step), tree, meta)
+            path = self._path(step)
+            if self.chaos is not None and self.chaos.draw("torn", site=step):
+                # torn publish: write the real bytes, then truncate the
+                # published file at half — exactly what a crash mid-write
+                # leaves behind on a non-atomic path
+                tmp = path + ".chaos"
+                save_pytree(tmp, tree, meta)
+                with open(tmp, "rb") as f:
+                    blob = f.read()
+                os.remove(tmp)
+                with open(path, "wb") as f:
+                    f.write(blob[:max(1, len(blob) // 2)])
+                self.torn_writes += 1
+            else:
+                save_pytree(path, tree, meta)
             self._prune()
 
     def restore(self, step: Optional[int] = None, target=None, shardings=None):
-        step = self.latest_step() if step is None else step
+        """Restore `step` (default: latest). A torn/corrupt file is
+        detected (``CheckpointCorruptError``), warned about, and skipped —
+        the restore falls back to the latest intact earlier step. Raises
+        only when NO intact checkpoint at or below `step` exists."""
+        steps = self.all_steps()
         if step is None:
+            candidates = list(reversed(steps))
+        else:
+            candidates = [step] + [s for s in reversed(steps) if s < step]
+        if not candidates:
             return None, None
-        return load_pytree(self._path(step), target=target,
-                           shardings=shardings)
+        for s in candidates:
+            try:
+                return load_pytree(self._path(s), target=target,
+                                   shardings=shardings)
+            except CheckpointCorruptError as e:
+                warnings.warn(f"checkpoint step {s} is torn/corrupt ({e}); "
+                              "falling back to the previous intact step")
+        raise CheckpointCorruptError(
+            f"no intact checkpoint in {self.dir} "
+            f"(tried steps {candidates})")
 
     def _prune(self):
         steps = self.all_steps()

@@ -21,6 +21,7 @@ import jax
 
 from repro.configs import get_config, get_smoke_config
 from repro.models import transformer as T
+from repro.runtime.chaos import FaultSchedule
 from repro.serve import PersonalizationConfig, ServeEngine
 from repro.serve.engine import (make_branching_prefix_requests,
                                 make_random_requests,
@@ -43,6 +44,11 @@ def build_engine(args, cfg=None):
                                       learning_rate=args.personalize_lr),
             store_capacity=args.delta_capacity,
             train_tokens=args.train_tokens, seed=args.seed)
+    chaos = None
+    if args.fault_rate > 0.0 or args.kill_after is not None:
+        chaos = FaultSchedule(args.chaos_seed, fault_rate=args.fault_rate,
+                              slow_s=args.chaos_slow_s,
+                              kill_after=args.kill_after)
     engine = ServeEngine(
         cfg, params, num_slots=args.batch,
         max_len=args.prompt_len + args.gen_len,
@@ -51,7 +57,10 @@ def build_engine(args, cfg=None):
         prefix_sharing=not args.no_prefix_sharing,
         prefix_mode=args.prefix_mode,
         prefix_persist=args.prefix_persist,
-        personalization=p13n)
+        personalization=p13n,
+        chaos=chaos, max_retries=args.max_retries,
+        shed_watermark=args.shed_watermark, watchdog_s=args.watchdog_s,
+        journal=args.journal)
     return cfg, engine
 
 
@@ -130,6 +139,29 @@ def add_serve_args(ap: argparse.ArgumentParser):
                     help="tokens per online train wave")
     ap.add_argument("--delta-capacity", type=int, default=32,
                     help="max resident per-user deltas (hard LRU bound)")
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="> 0: deterministic chaos injection — per-draw "
+                         "probability of page-alloc / step / stream / slow "
+                         "faults (runtime/chaos.py)")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="fault-schedule seed: same seed, same faults")
+    ap.add_argument("--chaos-slow-s", type=float, default=0.002,
+                    help="injected straggler delay per slow fault")
+    ap.add_argument("--max-retries", type=int, default=3,
+                    help="transient faults absorbed per request before it "
+                         "is quarantined")
+    ap.add_argument("--shed-watermark", type=float, default=0.0,
+                    help="> 0: defer admission when free pages would drop "
+                         "below this fraction of the pool")
+    ap.add_argument("--watchdog-s", type=float, default=None,
+                    help="quarantine a request making no progress for this "
+                         "many seconds")
+    ap.add_argument("--journal", type=str, default=None,
+                    help="request-lifecycle journal file: admitted-but-"
+                         "unfinished requests are replayed after a restart")
+    ap.add_argument("--kill-after", type=int, default=None,
+                    help="inject a hard crash after N completed requests "
+                         "(exercises journal replay + prefix persistence)")
     return ap
 
 
@@ -155,6 +187,15 @@ def main(argv=None):
               f"({stats.snapshots_stored} stored), "
               f"{stats.spills} spills / {stats.rehydrates} rehydrates, "
               f"{stats.spill_entries} tier entries")
+    if args.fault_rate > 0.0 or args.kill_after is not None \
+            or args.journal is not None:
+        print(f"[serve] chaos: {stats.faults_injected} faults injected "
+              f"{dict(stats.faults_by_kind)}, {stats.retries} retries, "
+              f"{stats.sheds} sheds, {stats.quarantined} quarantined, "
+              f"{stats.watchdog_kills} watchdog kills, "
+              f"{stats.stream_errors} stream errors, "
+              f"{stats.journal_replays} journal replays, "
+              f"{stats.stragglers} straggler waves")
     if args.users > 0:
         print(f"[serve] personalization: {args.users} users, "
               f"{stats.train_waves} train waves "

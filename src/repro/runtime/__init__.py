@@ -1,3 +1,8 @@
-from repro.runtime.fault import PreemptionHandler, StragglerMonitor, RestartableLoop
+from repro.runtime.chaos import (FaultEvent, FaultKind, FaultSchedule,
+                                 InjectedCrash, InjectedFault)
+from repro.runtime.fault import (PreemptionHandler, RestartableLoop,
+                                 StragglerMonitor)
 
-__all__ = ["PreemptionHandler", "StragglerMonitor", "RestartableLoop"]
+__all__ = ["PreemptionHandler", "StragglerMonitor", "RestartableLoop",
+           "FaultSchedule", "FaultKind", "FaultEvent", "InjectedFault",
+           "InjectedCrash"]

@@ -15,6 +15,14 @@ Single-controller implementations with multi-host-shaped interfaces:
 - RestartableLoop: runs a step function under both; resumes from the latest
   checkpoint on (re)start — crash-restart is exercised in tests by killing
   and restarting the loop process.
+
+This module covers the TRAIN loop. The serve-side fault story — seeded
+deterministic fault injection (page-alloc failures, transient step errors,
+stream-callback exceptions, torn checkpoint writes), request retry with
+backoff, poison-request quarantine, load shedding, and the crash-safe
+request journal — lives in ``runtime/chaos.py`` and
+``serve/journal.py``; the serve engine reuses ``StragglerMonitor`` for
+its per-wave step timings.
 """
 from __future__ import annotations
 
@@ -127,10 +135,19 @@ class RestartableLoop:
                     on_metrics(step, metrics)
                 if pre.preempted:
                     self.manager.save(step, self.state,
-                                      {"emergency": True})
+                                      {"emergency": True,
+                                       "stragglers":
+                                           [[int(s), float(d)] for s, d
+                                            in self.straggler.flagged],
+                                       "median_step_s":
+                                           float(self.straggler.median())})
                     self.emergency_saved = True
                     break
-                if step % self.checkpoint_every == 0:
+                # the final step is saved once, by the `final` save below —
+                # saving it here too wrote the same step twice whenever
+                # total_steps was a multiple of checkpoint_every
+                if step % self.checkpoint_every == 0 \
+                        and step != self.total_steps:
                     self.manager.save(step, self.state)
             if step >= self.total_steps:
                 self.manager.save(step, self.state, {"final": True})

@@ -65,6 +65,7 @@ from repro.serve.engine import (RequestResult, ServeEngine, ServeStats,
                                 make_branching_prefix_requests,
                                 make_random_requests,
                                 make_shared_prefix_requests)
+from repro.serve.journal import RequestJournal
 from repro.serve.paging import (ChainPrefixCache, MatchResult, PagePool,
                                 RadixPrefixCache, SpillTier)
 from repro.serve.sampling import sample_token
@@ -72,7 +73,8 @@ from repro.serve.scheduler import Request, Scheduler, Slot, SlotState
 
 __all__ = [
     "ChainPrefixCache", "DeltaStore", "MatchResult", "PagePool",
-    "PersonalizationConfig", "RadixPrefixCache", "Request", "RequestResult",
+    "PersonalizationConfig", "RadixPrefixCache", "Request", "RequestJournal",
+    "RequestResult",
     "Scheduler", "ServeEngine", "ServeStats", "Slot", "SlotState",
     "SpillTier", "sample_token", "make_branching_prefix_requests",
     "make_random_requests", "make_shared_prefix_requests",

@@ -36,6 +36,29 @@ comparison. "off" disables sharing entirely.
 PRNG: the engine key is split every step, so temperature sampling and the
 placeholder-embeds input path (``cfg.embed_inputs`` frontends) never reuse
 a key across steps.
+
+Robustness (``runtime/chaos.py`` is the serve-side fault story):
+
+- *Deterministic fault injection*: a seeded ``FaultSchedule`` makes page
+  allocations, prefill/decode steps, and stream callbacks fail (or run
+  slow) on a replayable schedule. Step faults fire BEFORE the jitted call
+  and alloc faults before any pool mutation, so every injected failure is
+  retryable without state repair — under greedy decoding, faults change
+  latency and counters, never served tokens (pinned by parity tests).
+- *Graceful degradation*: a faulted slot retries with capped exponential
+  backoff (its batch row is masked out, state frozen bit-for-bit); a
+  request that exhausts ``max_retries`` — or trips the hung-request
+  watchdog — is closed as "quarantined" so one poison request can never
+  wedge a slot; admission sheds (defers) load when free pages would drop
+  below ``shed_watermark`` (shed requests keep their `timeout_s`
+  accounting); stream-callback exceptions are absorbed, not fatal; every
+  engine iteration feeds a ``StragglerMonitor``.
+- *Crash safety*: with ``journal=...`` every admission/completion is
+  fsynced to an append-only request journal; ``recover_requests()`` on a
+  restarted engine replays in-flight requests, and the prefix spill tier
+  (flushed on BOTH clean exit and crash unwind) turns their re-prefill
+  into prefix/snapshot hits. ``InjectedCrash`` (``kill_after``) simulates
+  the hard kill end to end.
 """
 from __future__ import annotations
 
@@ -49,9 +72,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint.manager import restore_spill_tier, save_spill_tier
+from repro.checkpoint.manager import (CheckpointCorruptError,
+                                      restore_spill_tier, save_spill_tier)
 from repro.models import decoding as D
+from repro.runtime.chaos import FaultKind, InjectedCrash, InjectedFault
+from repro.runtime.fault import StragglerMonitor
 from repro.serve.deltas import DeltaStore, PersonalizationConfig
+from repro.serve.journal import RequestJournal
 from repro.serve.paging import (ChainPrefixCache, PagePool, RadixPrefixCache,
                                 SpillTier)
 from repro.serve.sampling import sample_token
@@ -116,6 +143,17 @@ class ServeStats:
     train_wave_s: float = 0.0       # wall time spent in train waves
     wave_losses: list = dataclasses.field(default_factory=list)
     # (user, pre-update loss) per wave, in wave order
+    # robustness / chaos (all zero without a FaultSchedule / journal)
+    faults_injected: int = 0        # chaos draws that fired during this run
+    faults_by_kind: dict = dataclasses.field(default_factory=dict)
+    retries: int = 0                # transient faults absorbed by backoff
+    sheds: int = 0                  # requests deferred by the load-shed watermark
+    quarantined: int = 0            # requests closed as poison
+    tokens_quarantined: int = 0
+    watchdog_kills: int = 0         # quarantines from the hung-request watchdog
+    stream_errors: int = 0          # stream-callback exceptions absorbed
+    journal_replays: int = 0        # re-admissions recovered from the journal
+    stragglers: int = 0             # engine iterations flagged as stragglers
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -150,9 +188,30 @@ class ServeEngine:
                  prefix_persist: Optional[str] = None,
                  spill_entries: int = 4096, snapshot_budget: int = 256,
                  max_tree_nodes: int = 4096,
-                 personalization: Optional[PersonalizationConfig] = None):
+                 personalization: Optional[PersonalizationConfig] = None,
+                 chaos=None, max_retries: int = 3,
+                 retry_backoff_s: float = 0.005,
+                 retry_backoff_cap_s: float = 0.1,
+                 shed_watermark: float = 0.0,
+                 watchdog_s: Optional[float] = None,
+                 journal=None, straggler_factor: float = 2.5):
         assert num_slots >= 1 and max_len >= 2 and page_size >= 1
         assert prefix_mode in ("radix", "chain", "off")
+        assert max_retries >= 0 and 0.0 <= shed_watermark < 1.0
+        # robustness knobs (see the module docstring's Robustness section);
+        # `chaos` is a runtime.chaos.FaultSchedule or None — every injection
+        # point is gated on it, so a chaos-free engine runs the exact
+        # pre-chaos code path
+        self.chaos = chaos
+        self.max_retries = max_retries
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.retry_backoff_cap_s = float(retry_backoff_cap_s)
+        self.shed_watermark = float(shed_watermark)
+        self.watchdog_s = watchdog_s
+        self._straggler_factor = straggler_factor
+        self._journal = RequestJournal(journal) if isinstance(journal, str) \
+            else journal
+        self._stream_errors = 0
         self.cfg = cfg
         self.params = params
         self.num_slots = num_slots
@@ -185,13 +244,24 @@ class ServeEngine:
         # state survives pool teardown (and, with prefix_persist, restarts)
         self._spill = SpillTier(spill_entries) \
             if prefix_mode == "radix" else None
+        self._cache = None      # built per run(); None until the first run
         self._persist_path = None
         if prefix_persist is not None and self._spill is not None:
             os.makedirs(prefix_persist, exist_ok=True)
             self._persist_path = os.path.join(prefix_persist,
                                               "prefix_tree.ckpt")
             if os.path.exists(self._persist_path):
-                meta = restore_spill_tier(self._persist_path, self._spill)
+                try:
+                    meta = restore_spill_tier(self._persist_path, self._spill)
+                except CheckpointCorruptError as e:
+                    # torn persist file (crash mid-write): cold start beats
+                    # crashing the restart
+                    import warnings
+                    warnings.warn(f"prefix-persist tree is corrupt ({e}); "
+                                  "starting cold")
+                    self._spill.clear()
+                    meta = {"page_size": page_size, "max_len": max_len,
+                            "model": cfg.name}
                 if (meta.get("page_size") != page_size
                         or meta.get("max_len") != max_len
                         or meta.get("model") != cfg.name):
@@ -494,9 +564,82 @@ class ServeEngine:
             slot.match = None
         self._pt[slot.index, :] = -1
 
+    # -- robustness --------------------------------------------------------
+
+    def _transient_fault(self, slot: Slot) -> bool:
+        """Absorb one transient fault on `slot`'s request: count the retry
+        and schedule capped exponential backoff. Returns True when the
+        retry budget is exhausted — the caller quarantines the request so
+        a poison request can never wedge the slot forever."""
+        slot.retries += 1
+        self._retry_events += 1
+        if slot.retries > self.max_retries:
+            return True
+        back = min(self.retry_backoff_cap_s,
+                   self.retry_backoff_s * (2 ** (slot.retries - 1)))
+        slot.retry_at = time.perf_counter() + back
+        return False
+
+    def _wrap_stream(self, req: Request):
+        """Guard a request's stream callback: injected stream faults AND
+        real exceptions raised by the callback are absorbed (counted in
+        `stream_errors`, treated as "keep generating") — a broken client
+        degrades its own stream, it never crashes the engine or changes
+        the served tokens. Returning False still cancels."""
+        inner = req.stream
+        if inner is None or getattr(inner, "_chaos_guarded", False):
+            return inner
+
+        def guarded(rid, tok):
+            try:
+                if self.chaos is not None:
+                    self.chaos.maybe_raise(FaultKind.STREAM, site=rid)
+                return inner(rid, tok)
+            except Exception:
+                self._stream_errors += 1
+                return None
+        guarded._chaos_guarded = True
+        return guarded
+
+    def _persist_prefix_state(self) -> None:
+        """Flush the radix tree (pages + snapshots) into the host spill
+        tier — and, with `prefix_persist`, to disk — while the device
+        pools are still alive. Runs on clean exit AND on the crash-unwind
+        path, so a killed engine still leaves a warm tree behind."""
+        if self.prefix_mode != "radix" or self._cache is None:
+            return
+        self._cache.spill_all()
+        if self._persist_path is not None:
+            save_spill_tier(self._persist_path, self._spill,
+                            meta={"page_size": self.page_size,
+                                  "max_len": self.max_len,
+                                  "model": self.cfg.name})
+
+    def recover_requests(self) -> list[Request]:
+        """In-flight requests from the journal: admitted by a previous
+        (crashed) engine, never completed. Feed them back through `run()`
+        — with `prefix_persist` their already-prefilled pages come back
+        as prefix/snapshot hits instead of recomputation. Returns [] when
+        the engine has no journal."""
+        if self._journal is None:
+            return []
+        return self._journal.pending_requests()
+
     # -- serve loop --------------------------------------------------------
 
     def run(self, requests: list[Request], verbose: bool = False) -> ServeStats:
+        try:
+            return self._run(requests, verbose)
+        except BaseException:
+            # crash unwind — including InjectedCrash, which `except
+            # Exception` recovery code can never swallow: flush the radix
+            # tree to the spill tier (and disk, with prefix_persist) so a
+            # restarted engine replays journaled requests against a warm
+            # prefix cache instead of a cold one
+            self._persist_prefix_state()
+            raise
+
+    def _run(self, requests: list[Request], verbose: bool) -> ServeStats:
         for r in requests:
             assert r.max_new_tokens >= 1, (
                 f"request {r.rid}: max_new_tokens must be >= 1")
@@ -507,14 +650,29 @@ class ServeEngine:
                 f"request {r.rid} needs {self._pages_needed(r)} pages; "
                 f"pool has {self.num_pages}")
         sched = Scheduler(self.num_slots, eos_id=self.eos_id)
+        # rids journaled by a previous (crashed) engine and re-admitted in
+        # this run count as journal replays
+        replay_rids = (self._journal.pending_rids()
+                       if self._journal is not None else set())
         for r in requests:
+            r.stream = self._wrap_stream(r)
             sched.submit(r)
+        chaos = self.chaos
+        faults0 = chaos.faults_injected if chaos is not None else 0
+        kinds0 = dict(chaos.faults_by_kind) if chaos is not None else {}
+        self._retry_events = 0
+        self._stream_errors = 0
+        self._watchdog_kills = 0
+        journal_replays = 0
+        shed_rids: set[int] = set()
+        mon = StragglerMonitor(factor=self._straggler_factor)
 
         state, self._pools = D.init_serve_cache(
             self.cfg, self.num_slots, self.max_len,
             max(1, self.num_pages), self.page_size)
         self._pt = np.full((self.num_slots, self.max_pages), -1, np.int32)
-        self._pool = PagePool(max(1, self.num_pages), self.page_size)
+        self._pool = PagePool(max(1, self.num_pages), self.page_size,
+                              chaos=self.chaos)
         if self.prefix_mode == "radix":
             self._cache = RadixPrefixCache(
                 self._pool, has_pages=self.has_pages,
@@ -547,18 +705,43 @@ class ServeEngine:
                 req.rid, list(slot.out_tokens),
                 time.perf_counter() - t0, status)
             self._release_slot(slot)
+            if self._journal is not None:
+                self._journal.done(req.rid, status)
+            # injected crash fires AFTER the journal records this request
+            # done and its slot is released: the completed request is never
+            # replayed, and pool accounting stays consistent for the
+            # crash-unwind prefix flush
+            if chaos is not None and status == "completed" \
+                    and chaos.crash_due(sched.requests_completed):
+                raise InjectedCrash(
+                    f"injected crash after {sched.requests_completed} "
+                    f"completed request(s)")
             if verbose and status == "completed":
                 print(f"[serve] completed {sched.requests_completed}"
                       f"/{len(requests)} requests")
 
+        it_prev, it_work = None, False
         while not sched.done:
             now = time.perf_counter()
-            # 1) deadlines: cancel overdue slots, drop overdue queued requests
+            # per-wave serve timing: only iterations that ran a jitted step
+            # count — idle/backoff spins are sub-ms and would drag the
+            # median down until every real wave looked like a straggler
+            if it_prev is not None and it_work:
+                mon.record(now - it_prev)
+            it_prev, it_work = now, False
+            # 1) deadlines: cancel overdue slots, drop overdue queued
+            # requests; watchdog-quarantine slots that stopped progressing
             for slot in sched.live_slots():
                 dl = deadline[slot.request.rid]
                 if dl is not None and now > dl:
                     sched.cancel(slot)
                     close(slot, "cancelled")
+                    continue
+                if (self.watchdog_s is not None
+                        and now - slot.last_progress > self.watchdog_s):
+                    self._watchdog_kills += 1
+                    sched.quarantine(slot)
+                    close(slot, "quarantined")
             for req in [q for q in sched.queue
                         if deadline[q.rid] is not None
                         and now > deadline[q.rid]]:
@@ -583,17 +766,38 @@ class ServeEngine:
                     matched, covered = mr.pages, mr.covered
                 has_partial = bool(matched) and matched[-1][1] < self.page_size
                 need = self._pages_needed(req) - len(matched) + int(has_partial)
-                if self.has_pages and self._headroom(sched) < need:
+                pressure = self.has_pages and self._headroom(sched) < need
+                # load shedding: admitting would drop free pages below the
+                # watermark, so defer while anything is in flight. The shed
+                # request stays queued, keeps ticking toward its own
+                # timeout_s (the queued-deadline drop above provides the
+                # accounting) — never silently dropped.
+                shed = (not pressure and self.has_pages
+                        and self.shed_watermark > 0.0
+                        and bool(sched.live_slots())
+                        and self._headroom(sched) - need
+                        < self.shed_watermark * self.num_pages)
+                if pressure or shed:
                     if mr is not None:              # roll the match back
                         self._cache.abandon(mr, req.prompt_len)
                         mr, matched, covered = None, [], 0
                     if sched.live_slots():
+                        if shed:
+                            shed_rids.add(req.rid)  # counted once per rid
                         break       # retry when an in-flight request frees pages
                     # nothing in flight will ever free pages: admit WITHOUT
                     # sharing — with no live slots every cache page is
                     # evictable, so pages_needed <= num_pages always fits
+                    # (the watermark never blocks this path: degraded
+                    # trickle admission beats deadlock)
                     assert self._headroom(sched) >= self._pages_needed(req)
                 sched.commit_admission(slot, prefilled=covered)
+                slot.last_progress = time.perf_counter()
+                if self._journal is not None:
+                    if req.rid in replay_rids:
+                        journal_replays += 1
+                        replay_rids.discard(req.rid)
+                    self._journal.admit(req)
                 slot.match = mr     # pinned until the slot closes
                 slot.page_ids = [pid for pid, _ in matched]
                 slot.registered_pages = len(matched) - int(has_partial)
@@ -622,68 +826,92 @@ class ServeEngine:
             # 3) chunked prefill: one page-sized chunk per PREFILL slot
             for slot in sched.prefill_slots():
                 req = slot.request
-                shareable = (self._cache is not None
-                             and req.tokens is not None and req.user is None)
-                # chunk-time adoption: a page a CONCURRENT slot registered
-                # since our admission can be attached instead of recomputed
-                # (same-wave admissions of a common prefix share this way).
-                # State archs skip it: adopting K/V rows without restoring
-                # the recurrent state at that boundary would skip the state
-                # those tokens should have produced.
-                while (shareable and not self._need_state
-                       and slot.pos % self.page_size == 0
-                       and slot.pos + self.page_size <= req.prompt_len - 1
-                       and slot.pos // self.page_size == len(slot.page_ids)):
-                    pid = self._cache.match_page(
-                        np.asarray(req.tokens), slot.pos)
-                    if pid is None:
-                        break
-                    slot.page_ids.append(pid)
-                    self._pt[slot.index, len(slot.page_ids) - 1] = pid
-                    slot.pos += self.page_size
-                    slot.registered_pages = len(slot.page_ids)
-                size = min(self.page_size, req.prompt_len - slot.pos)
-                self._pools = self._ensure_writable(
-                    slot, slot.pos, slot.pos + size, self._pools)
-                st_row = self._extract(state, slot.index)
-                pt_row = jnp.asarray(self._pt[slot.index:slot.index + 1])
-                d_row = None if self._dbatch is None else \
-                    self._extract(self._dbatch, slot.index)
-                logits, st_row, self._pools = self._step(
-                    self.params, self._chunk_batch(req, slot.pos, size),
-                    st_row, self._pools, pt_row, d_row)
-                state = self._insert(state, st_row, slot.index)
-                slot.pos += size
-                prefill_chunks += 1
-                if shareable and self.has_pages:
-                    slot.registered_pages = self._cache.insert_pages(
-                        np.asarray(req.tokens),
-                        min(slot.pos, req.prompt_len) // self.page_size,
-                        slot.page_ids, slot.registered_pages)
-                if (shareable and self._need_state and slot.pos > 0
-                        and slot.pos % self.page_size == 0
-                        and self._cache.wants_snapshot(
-                            np.asarray(req.tokens), slot.pos)):
-                    # recurrent state at this page boundary, copied to host:
-                    # the snapshot that lets a later shared-prefix request
-                    # resume from here instead of re-prefilling
-                    blob = jax.tree.map(
-                        np.asarray,
-                        jax.device_get(self._extract(state, slot.index)))
-                    self._cache.insert_snapshot(
-                        np.asarray(req.tokens), slot.pos, blob)
-                if slot.pos == req.prompt_len:
-                    sched.finish_prefill(slot)
-                    if shareable and self.has_pages \
-                            and not self._need_state \
-                            and self._headroom(sched) >= 1:
-                        self._cache.insert_partial(
-                            np.asarray(req.tokens), slot.page_ids[-1])
-                    first = int(self._sample(logits, self._sample_key())[0])
-                    outcome = sched.record_token(slot, first)
-                    if outcome is not None:
-                        close(slot, "completed" if outcome == "done"
-                              else "cancelled")
+                if now < slot.retry_at:
+                    continue        # backing off after a transient fault
+                # faults are injected BEFORE the jitted step and before any
+                # pool mutation, so absorbing one and retrying next
+                # iteration replays the identical chunk — injected faults
+                # can delay a request but never change its tokens
+                try:
+                    if chaos is not None:
+                        chaos.maybe_raise(FaultKind.STEP, site=req.rid)
+                        if chaos.draw(FaultKind.SLOW, site=req.rid):
+                            time.sleep(chaos.slow_s)
+                    shareable = (self._cache is not None
+                                 and req.tokens is not None
+                                 and req.user is None)
+                    # chunk-time adoption: a page a CONCURRENT slot
+                    # registered since our admission can be attached
+                    # instead of recomputed (same-wave admissions of a
+                    # common prefix share this way). State archs skip it:
+                    # adopting K/V rows without restoring the recurrent
+                    # state at that boundary would skip the state those
+                    # tokens should have produced.
+                    while (shareable and not self._need_state
+                           and slot.pos % self.page_size == 0
+                           and slot.pos + self.page_size <= req.prompt_len - 1
+                           and slot.pos // self.page_size == len(slot.page_ids)):
+                        pid = self._cache.match_page(
+                            np.asarray(req.tokens), slot.pos)
+                        if pid is None:
+                            break
+                        slot.page_ids.append(pid)
+                        self._pt[slot.index, len(slot.page_ids) - 1] = pid
+                        slot.pos += self.page_size
+                        slot.registered_pages = len(slot.page_ids)
+                    size = min(self.page_size, req.prompt_len - slot.pos)
+                    self._pools = self._ensure_writable(
+                        slot, slot.pos, slot.pos + size, self._pools)
+                    st_row = self._extract(state, slot.index)
+                    pt_row = jnp.asarray(self._pt[slot.index:slot.index + 1])
+                    d_row = None if self._dbatch is None else \
+                        self._extract(self._dbatch, slot.index)
+                    logits, st_row, self._pools = self._step(
+                        self.params, self._chunk_batch(req, slot.pos, size),
+                        st_row, self._pools, pt_row, d_row)
+                    state = self._insert(state, st_row, slot.index)
+                    slot.pos += size
+                    prefill_chunks += 1
+                    it_work = True
+                    slot.last_progress = time.perf_counter()
+                    if shareable and self.has_pages:
+                        slot.registered_pages = self._cache.insert_pages(
+                            np.asarray(req.tokens),
+                            min(slot.pos, req.prompt_len) // self.page_size,
+                            slot.page_ids, slot.registered_pages)
+                    if (shareable and self._need_state and slot.pos > 0
+                            and slot.pos % self.page_size == 0
+                            and self._cache.wants_snapshot(
+                                np.asarray(req.tokens), slot.pos)):
+                        # recurrent state at this page boundary, copied to
+                        # host: the snapshot that lets a later
+                        # shared-prefix request resume from here instead
+                        # of re-prefilling
+                        blob = jax.tree.map(
+                            np.asarray,
+                            jax.device_get(self._extract(state, slot.index)))
+                        self._cache.insert_snapshot(
+                            np.asarray(req.tokens), slot.pos, blob)
+                    if slot.pos == req.prompt_len:
+                        sched.finish_prefill(slot)
+                        if shareable and self.has_pages \
+                                and not self._need_state \
+                                and self._headroom(sched) >= 1:
+                            self._cache.insert_partial(
+                                np.asarray(req.tokens), slot.page_ids[-1])
+                        first = int(
+                            self._sample(logits, self._sample_key())[0])
+                        outcome = sched.record_token(slot, first)
+                        if outcome is not None:
+                            close(slot, "completed" if outcome == "done"
+                                  else "cancelled")
+                except InjectedFault:
+                    # partial progress before the fault (adopted pages,
+                    # incremental allocs) is recorded on the slot, so the
+                    # retry resumes consistently instead of re-doing it
+                    if self._transient_fault(slot):
+                        sched.quarantine(slot)
+                        close(slot, "quarantined")
 
             active = sched.active_slots()
             if not active:
@@ -697,40 +925,64 @@ class ServeEngine:
                 continue
 
             # 4) one decode step over the full fixed-shape batch; each slot
-            # consumes its last sampled token at position slot.pos
+            # consumes its last sampled token at position slot.pos. Slots
+            # backing off after a transient fault — or drawing one now —
+            # are masked out of active_row: an inactive row keeps its state
+            # and cache bit-for-bit (existing engine contract), so the
+            # retried step feeds identical inputs and, with greedy
+            # sampling's fixed key, produces the identical token.
+            runnable = []
             for slot in active:
-                self._pools = self._ensure_writable(
-                    slot, slot.pos, slot.pos + 1, self._pools)
+                if now < slot.retry_at:
+                    continue
+                try:
+                    if chaos is not None:
+                        chaos.maybe_raise(FaultKind.STEP,
+                                          site=slot.request.rid)
+                        if chaos.draw(FaultKind.SLOW, site=slot.request.rid):
+                            time.sleep(chaos.slow_s)
+                    self._pools = self._ensure_writable(
+                        slot, slot.pos, slot.pos + 1, self._pools)
+                except InjectedFault:
+                    if self._transient_fault(slot):
+                        sched.quarantine(slot)
+                        close(slot, "quarantined")
+                    continue
+                runnable.append(slot)
+            if not runnable:
+                time.sleep(0.0005)  # everyone backing off: don't busy-spin
+                continue
+            run_idx = {s.index for s in runnable}
             tokens_row = [s.last_token for s in sched.slots]
             pos_row = [min(s.pos, self.max_len - 1) for s in sched.slots]
-            active_row = [s.state is SlotState.ACTIVE for s in sched.slots]
+            active_row = [s.state is SlotState.ACTIVE and s.index in run_idx
+                          for s in sched.slots]
             logits, state, self._pools = self._step(
                 self.params,
                 self._decode_batch(tokens_row, pos_row, active_row),
                 state, self._pools, jnp.asarray(self._pt), self._dbatch)
+            it_work = True
             toks = np.asarray(self._sample(logits, self._sample_key()))
-            for slot in active:           # inactive rows: sampled, discarded
+            for slot in runnable:         # inactive rows: sampled, discarded
                 slot.pos += 1             # the fed token is now cached
+                slot.last_progress = time.perf_counter()
                 outcome = sched.record_token(slot, int(toks[slot.index]))
                 if outcome is not None:
                     close(slot, "completed" if outcome == "done"
                           else "cancelled")
 
-        if self.prefix_mode == "radix" and self._cache is not None:
-            # write the whole tree (pages + snapshots) into the host tier
-            # while the device pools are still alive, so the NEXT run (or a
-            # restarted engine, via prefix_persist) rehydrates hot prefixes
-            # instead of starting cold
-            self._cache.spill_all()
-            if self._persist_path is not None:
-                save_spill_tier(self._persist_path, self._spill,
-                                meta={"page_size": self.page_size,
-                                      "max_len": self.max_len,
-                                      "model": self.cfg.name})
+        self._persist_prefix_state()
         wall = time.perf_counter() - t0
         lat = [r.latency_s for r in results.values()
                if r.status == "completed"] or [0.0]
         c = self._cache
+        if chaos is not None:
+            d_faults = chaos.faults_injected - faults0
+            d_kinds = {k: v - kinds0.get(k, 0)
+                       for k, v in chaos.faults_by_kind.items()
+                       if v - kinds0.get(k, 0)}
+        else:
+            d_faults, d_kinds = 0, {}
         return ServeStats(
             requests_completed=sched.requests_completed,
             requests_cancelled=sched.requests_cancelled,
@@ -767,6 +1019,16 @@ class ServeEngine:
             train_wave_s=(self._wave_s if self._p13n is not None else 0.0),
             wave_losses=(list(self._wave_losses)
                          if self._p13n is not None else []),
+            faults_injected=d_faults,
+            faults_by_kind=d_kinds,
+            retries=self._retry_events,
+            sheds=len(shed_rids),
+            quarantined=sched.requests_quarantined,
+            tokens_quarantined=sched.tokens_quarantined,
+            watchdog_kills=self._watchdog_kills,
+            stream_errors=self._stream_errors,
+            journal_replays=journal_replays,
+            stragglers=len(mon.flagged),
         )
 
 

@@ -84,6 +84,10 @@ class Slot:
     page_ids: list = dataclasses.field(default_factory=list)
     registered_pages: int = 0  # prefix-cache registration watermark
     match: Optional[object] = None  # pinned prefix-cache MatchResult
+    # engine-owned robustness state for the current request
+    retries: int = 0           # transient faults absorbed so far
+    retry_at: float = 0.0      # wall clock before which the slot backs off
+    last_progress: float = 0.0  # watchdog: last time pos advanced
 
 
 class Scheduler:
@@ -102,8 +106,10 @@ class Scheduler:
         self.eos_id = eos_id
         self.requests_completed = 0
         self.requests_cancelled = 0
+        self.requests_quarantined = 0
         self.tokens_out = 0
         self.tokens_cancelled = 0
+        self.tokens_quarantined = 0
         self.refills = 0          # admissions into a previously-used slot
 
     def submit(self, request: Request) -> None:
@@ -133,6 +139,8 @@ class Scheduler:
         slot.prefilled = prefilled
         slot.generated = 0
         slot.out_tokens = []
+        slot.retries = 0
+        slot.retry_at = 0.0
         return req
 
     def prefill_slots(self) -> list[Slot]:
@@ -178,6 +186,16 @@ class Scheduler:
         assert slot.state is not SlotState.FREE
         self.requests_cancelled += 1
         self.tokens_cancelled += slot.generated
+        slot.state = SlotState.FREE
+
+    def quarantine(self, slot: Slot) -> None:
+        """Close a poison request (exhausted its retry budget, or tripped
+        the hung-request watchdog): the slot is freed for the next
+        admission, and the request's tokens land in dedicated quarantine
+        counters — never in throughput, never silently dropped."""
+        assert slot.state is not SlotState.FREE
+        self.requests_quarantined += 1
+        self.tokens_quarantined += slot.generated
         slot.state = SlotState.FREE
 
     def drop_queued(self, request: Request) -> None:

@@ -1,0 +1,415 @@
+"""Chaos-hardened serving: deterministic fault injection, crash-safe
+restart, and graceful degradation.
+
+The contract under test, end to end:
+
+- ``FaultSchedule`` is DETERMINISTIC: same seed + rates -> identical fired
+  fault sequence (property test), zero rate -> zero faults, and an engine
+  built without a schedule runs the pre-chaos code path with every chaos
+  counter at zero.
+- Injected faults DEGRADE, never corrupt: under transient step/alloc/
+  stream/slow faults the engine's greedy output is TOKEN-IDENTICAL to the
+  fault-free run (faults fire before the jitted step and before any pool
+  mutation, so retries are idempotent and masked decode rows keep state
+  bit-for-bit).
+- Poison requests (every step draw fires) exhaust their retry budget and
+  are QUARANTINED — dedicated counters, slot freed, neighbors unharmed.
+  A hung request is likewise quarantined by the watchdog.
+- Admission load-sheds below a free-page watermark without ever dropping
+  a request unaccounted.
+- A stream callback that raises (injected or real) costs its own stream
+  only — the request still completes with the same tokens.
+- Crash-safety: after ``InjectedCrash`` mid-run, a restarted engine
+  replays journaled in-flight requests to completion with prefix hits
+  from the persisted spill tier; the journal tolerates a torn tail.
+- Checkpoints carry a checksum footer: bit flips and torn (truncated)
+  files raise ``CheckpointCorruptError``; ``CheckpointManager.restore``
+  falls back to the latest intact step and only raises when none exists.
+"""
+import os
+import signal
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointCorruptError, CheckpointManager,
+                              load_pytree, save_pytree)
+from repro.configs import get_smoke_config
+from repro.models import transformer as T
+from repro.runtime import (FaultSchedule, InjectedCrash, InjectedFault,
+                           RestartableLoop)
+from repro.serve import PagePool, Request, RequestJournal, ServeEngine
+from repro.serve.engine import make_shared_prefix_requests
+from repro.testing import given, settings, st
+
+PROMPT_LEN = 16
+GEN_LEN = 6
+PAGE = 4
+MAX_LEN = PROMPT_LEN + GEN_LEN
+ARCH = "llama3-8b"
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = get_smoke_config(ARCH)
+    return cfg, T.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _requests(cfg, n=5, seed=3):
+    return make_shared_prefix_requests(cfg, n, 2 * PAGE, PROMPT_LEN,
+                                       GEN_LEN, seed=seed)
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("num_slots", 2)
+    kw.setdefault("max_len", MAX_LEN)
+    kw.setdefault("page_size", PAGE)
+    return ServeEngine(cfg, params, **kw)
+
+
+def _tokens(stats, status="completed"):
+    return {r.rid: list(r.tokens) for r in stats.results.values()
+            if r.status == status}
+
+
+# ---------------------------------------------------------------------------
+# FaultSchedule determinism
+# ---------------------------------------------------------------------------
+
+def _replay(seed, rate, draws):
+    sched = FaultSchedule(seed, fault_rate=rate)
+    for kind, site in draws:
+        sched.draw(kind, site)
+    return sched
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1),
+       rate=st.floats(min_value=0.05, max_value=0.95),
+       draws=st.lists(st.tuples(
+           st.sampled_from(["alloc", "step", "slow", "stream"]),
+           st.integers(0, 7)), min_size=1, max_size=64))
+def test_fault_schedule_determinism_property(seed, rate, draws):
+    """Same seed, same rates, same draw sequence -> identical fired-fault
+    sequence; the decision depends only on (seed, kind, counter), never on
+    wall time or hash randomization."""
+    a = _replay(seed, rate, draws)
+    b = _replay(seed, rate, draws)
+    assert a.sequence() == b.sequence()
+    assert a.faults_injected == b.faults_injected
+    assert a.faults_by_kind == b.faults_by_kind
+    # the (kind, index) pairs also ignore the site tag: interleaving the
+    # SAME per-kind draw order under different sites fires identically
+    c = _replay(seed, rate, [(k, s + 1) for k, s in draws])
+    assert [(k, i) for k, i, _ in a.sequence()] == \
+        [(k, i) for k, i, _ in c.sequence()]
+
+
+def test_fault_schedule_zero_rate_never_fires():
+    sched = FaultSchedule(7, fault_rate=0.0)
+    for n in range(500):
+        assert sched.draw("step", site=n) is False
+    assert sched.faults_injected == 0 and sched.sequence() == []
+
+
+def test_fault_schedule_seeds_differ():
+    """Different seeds must not share a fault sequence (rate high enough
+    that both fire plenty, yet at different draw indices)."""
+    seqs = set()
+    for seed in range(4):
+        sched = FaultSchedule(seed, fault_rate=0.3)
+        for _ in range(200):
+            sched.draw("step")
+        seqs.add(tuple(sched.sequence()))
+    assert len(seqs) == 4
+
+
+def test_fault_schedule_poison_and_caps():
+    sched = FaultSchedule(0, fault_rate=0.0, poison_rids={11})
+    assert sched.draw("step", site=11) is True      # poison always fires
+    assert sched.draw("step", site=12) is False
+    capped = FaultSchedule(0, fault_rate=1.0, max_faults=3)
+    fired = sum(capped.draw("alloc") for _ in range(10))
+    assert fired == 3
+    crash = FaultSchedule(0, kill_after=2)
+    assert not crash.crash_due(1)
+    assert crash.crash_due(2) is True
+    assert crash.crash_due(3) is False              # fires exactly once
+
+
+def test_page_pool_alloc_fault_precedes_mutation():
+    """An injected alloc failure must leave the pool untouched — the retry
+    that follows sees exactly the pre-fault free list."""
+    pool = PagePool(4, PAGE, chaos=FaultSchedule(0, rates={"alloc": 1.0}))
+    before = pool.free_pages
+    with pytest.raises(InjectedFault):
+        pool.alloc()
+    assert pool.free_pages == before
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation in the engine
+# ---------------------------------------------------------------------------
+
+def test_engine_token_parity_under_faults(smoke_model):
+    """THE robustness pin: 10% transient faults across every injection
+    point may delay requests but must not change a single served token."""
+    cfg, params = smoke_model
+    ref_stats = _engine(cfg, params).run(_requests(cfg))
+    ref = _tokens(ref_stats)
+    # the fault-free engine reports every chaos counter at zero
+    assert ref_stats.faults_injected == 0 and ref_stats.retries == 0
+    assert ref_stats.quarantined == 0 and ref_stats.journal_replays == 0
+
+    chaos = FaultSchedule(0, fault_rate=0.10)
+    stats = _engine(cfg, params, chaos=chaos, max_retries=10,
+                    retry_backoff_s=0.0005).run(_requests(cfg))
+    assert stats.faults_injected > 0, "10% rate never fired — dead wiring"
+    assert stats.retries > 0
+    assert stats.requests_completed == len(ref)
+    assert _tokens(stats) == ref, "injected faults changed served tokens"
+
+
+def test_stream_fault_and_real_stream_exception_survive(smoke_model):
+    """A stream callback that raises — injected or genuinely broken —
+    degrades that stream only: the request still completes, with the same
+    tokens, and the failures are counted."""
+    cfg, params = smoke_model
+    ref = _tokens(_engine(cfg, params).run(_requests(cfg, n=2)))
+
+    calls = {"n": 0}
+
+    def broken(rid, tok):
+        calls["n"] += 1
+        raise ValueError("client went away")
+
+    reqs = _requests(cfg, n=2)
+    reqs[0].stream = broken
+    chaos = FaultSchedule(0, rates={"stream": 0.5})
+    stats = _engine(cfg, params, chaos=chaos).run(reqs)
+    assert stats.requests_completed == 2
+    assert _tokens(stats) == ref
+    assert calls["n"] > 0
+    assert stats.stream_errors > 0
+    assert stats.faults_injected > 0      # injected stream faults counted
+
+
+def test_poison_request_quarantined_neighbors_unharmed(smoke_model):
+    """Every step draw fires for the poison rid: retries can never save
+    it, so the retry budget must quarantine it — and every other request
+    completes with fault-free tokens."""
+    cfg, params = smoke_model
+    ref = _tokens(_engine(cfg, params).run(_requests(cfg)))
+    poison = sorted(ref)[1]
+    chaos = FaultSchedule(0, poison_rids={poison})
+    stats = _engine(cfg, params, chaos=chaos, max_retries=2,
+                    retry_backoff_s=0.0005).run(_requests(cfg))
+    assert stats.quarantined == 1
+    assert stats.retries == 3             # max_retries + the final straw
+    assert stats.results[poison].status == "quarantined"
+    assert stats.requests_completed == len(ref) - 1
+    expected = {rid: t for rid, t in ref.items() if rid != poison}
+    assert _tokens(stats) == expected
+    # accounting: nothing dropped silently
+    assert len(stats.results) == len(ref)
+
+
+def test_watchdog_quarantines_hung_request(smoke_model):
+    """A request making no progress (poison, endless retry budget) trips
+    the watchdog instead of spinning forever. The engine is warmed fault-
+    free first so compile stalls can't masquerade as hangs, then the
+    watchdog is armed for the chaos run."""
+    cfg, params = smoke_model
+    eng = _engine(cfg, params, max_retries=10 ** 6,
+                  retry_backoff_s=0.001, retry_backoff_cap_s=0.002)
+    eng.run(_requests(cfg, n=2, seed=9))  # compile both step shapes
+    reqs = _requests(cfg, n=3)
+    poison = reqs[0].rid
+    eng.chaos = FaultSchedule(0, poison_rids={poison})
+    eng.watchdog_s = 0.25
+    stats = eng.run(reqs)
+    assert stats.watchdog_kills >= 1
+    assert stats.results[poison].status == "quarantined"
+    assert stats.requests_completed == len(reqs) - 1
+
+
+def test_load_shedding_below_watermark(smoke_model):
+    """With a high free-page watermark and a small pool, admission defers
+    (sheds) while requests are in flight — and still finishes everything:
+    shedding is backpressure, not loss."""
+    cfg, params = smoke_model
+    need = -(-MAX_LEN // PAGE)            # pages per request, ceil
+    stats = _engine(cfg, params, num_slots=3, num_pages=3 * need,
+                    prefix_sharing=False,
+                    shed_watermark=0.5).run(_requests(cfg, n=6))
+    assert stats.sheds > 0, "watermark high enough that shedding must fire"
+    assert stats.requests_completed == 6
+    ref = _tokens(_engine(cfg, params, num_slots=3, num_pages=3 * need,
+                          prefix_sharing=False).run(_requests(cfg, n=6)))
+    assert _tokens(stats) == ref
+
+
+# ---------------------------------------------------------------------------
+# crash-safe restart: journal + persisted prefix tier
+# ---------------------------------------------------------------------------
+
+def test_crash_journal_replay_with_prefix_hits(smoke_model, tmp_path):
+    """Kill the engine after 1 completion; the restarted engine must
+    replay every journaled in-flight request to completion, token-
+    identical, with prefix hits > 0 from the persisted spill tier."""
+    cfg, params = smoke_model
+    jpath = str(tmp_path / "journal.jsonl")
+    ppath = str(tmp_path / "spill")
+    ref = _tokens(_engine(cfg, params).run(_requests(cfg)))
+
+    eng = _engine(cfg, params, chaos=FaultSchedule(0, kill_after=1),
+                  journal=jpath, prefix_persist=ppath)
+    with pytest.raises(InjectedCrash):
+        eng.run(_requests(cfg))
+    eng._journal.close()
+
+    eng2 = _engine(cfg, params, journal=jpath, prefix_persist=ppath)
+    pending = eng2.recover_requests()
+    assert pending, "in-flight requests were admitted before the crash"
+    assert all(r.rid in ref for r in pending)
+    stats = eng2.run(pending)
+    assert stats.requests_completed == len(pending)
+    assert stats.journal_replays == len(pending)
+    assert stats.prefix_hit_tokens > 0, "restart should be warm, not cold"
+    for rid, toks in _tokens(stats).items():
+        assert toks == ref[rid]
+    # replayed requests were journaled done: a second restart is clean
+    eng2._journal.close()
+    eng3 = _engine(cfg, params, journal=jpath, prefix_persist=ppath)
+    assert eng3.recover_requests() == []
+
+
+def test_journal_torn_tail_tolerated(tmp_path):
+    """A crash mid-append leaves a torn final line; replay must skip it
+    (counted + warned) without losing the intact records before it."""
+    jpath = str(tmp_path / "j.jsonl")
+    j = RequestJournal(jpath)
+    j.admit(Request(1, 4, tokens=np.arange(6, dtype=np.int32)))
+    j.admit(Request(2, 4, tokens=np.arange(6, dtype=np.int32)))
+    j.done(1, "completed")
+    j.close()
+    with open(jpath, "ab") as f:          # torn tail: half a record
+        f.write(b'{"v": {"e": "done", "rid": 2')
+    j2 = RequestJournal(jpath)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        pending = j2.pending_requests()
+    assert [r.rid for r in pending] == [2]
+    assert j2.torn_lines_skipped == 1
+    assert pending[0].max_new_tokens == 4
+    np.testing.assert_array_equal(pending[0].tokens, np.arange(6))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint integrity: checksum footer, torn writes, fallback restore
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_checksum_detects_bitflip(tmp_path):
+    path = str(tmp_path / "x.ckpt")
+    save_pytree(path, {"w": jnp.arange(64.0)})
+    blob = bytearray(open(path, "rb").read())
+    blob[len(blob) // 2] ^= 0xFF
+    open(path, "wb").write(bytes(blob))
+    with pytest.raises(CheckpointCorruptError):
+        load_pytree(path)
+
+
+def test_restore_falls_back_past_torn_checkpoint(tmp_path):
+    """The regression from the satellite list: a truncated latest file is
+    detected and restore returns the previous intact step, warning."""
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"x": jnp.ones((3,))}
+    mgr.save(1, tree, {"tag": "old"})
+    mgr.save(2, tree, {"tag": "new"})
+    p2 = mgr._path(2)
+    blob = open(p2, "rb").read()
+    open(p2, "wb").write(blob[: len(blob) // 2])   # torn write
+    with pytest.warns(UserWarning, match="falling back"):
+        loaded, meta = mgr.restore(target=tree)
+    assert meta["step"] == 1 and meta["tag"] == "old"
+    np.testing.assert_array_equal(np.asarray(loaded["x"]), np.ones(3))
+    # every candidate corrupt -> explicit CheckpointCorruptError
+    p1 = mgr._path(1)
+    blob1 = open(p1, "rb").read()
+    open(p1, "wb").write(blob1[:10])
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        with pytest.raises(CheckpointCorruptError):
+            mgr.restore(target=tree)
+
+
+def test_manager_torn_write_injection(tmp_path):
+    """chaos 'torn' draws make save() publish a truncated file — restore
+    must survive exactly as it would a real torn write."""
+    mgr = CheckpointManager(str(tmp_path),
+                            chaos=FaultSchedule(0, rates={"torn": 1.0}))
+    tree = {"x": jnp.full((2,), 5.0)}
+    intact = CheckpointManager(str(tmp_path))
+    intact.save(1, tree)
+    mgr.save(2, tree)
+    assert mgr.torn_writes == 1
+    with pytest.warns(UserWarning, match="falling back"):
+        loaded, meta = mgr.restore(target=tree)
+    assert meta["step"] == 1
+
+
+# ---------------------------------------------------------------------------
+# train-loop satellites: double save, emergency metadata
+# ---------------------------------------------------------------------------
+
+class _CountingManager(CheckpointManager):
+    def __init__(self, directory):
+        super().__init__(directory)
+        self.saves = []
+
+    def save(self, step, tree, meta=None):
+        self.saves.append(int(step))
+        super().save(step, tree, meta)
+
+
+def test_restartable_loop_no_double_save(tmp_path):
+    """total_steps % checkpoint_every == 0 used to save the final step
+    twice (periodic + final). Exactly one save per step, final included."""
+    mgr = _CountingManager(str(tmp_path))
+    state = {"x": jnp.zeros(())}
+    loop = RestartableLoop(mgr, state, total_steps=6, checkpoint_every=3)
+    loop.run(lambda s, b: ({"x": s["x"] + 1.0}, {}), iter([{}] * 6))
+    assert mgr.saves == [3, 6], "final step must be saved exactly once"
+    _, meta = mgr.restore(target=state)
+    assert meta["step"] == 6 and meta.get("final") is True
+
+
+def test_emergency_save_records_straggler_state(tmp_path):
+    """Preemption mid-run: the emergency checkpoint's metadata carries the
+    straggler monitor's flagged steps and rolling median."""
+    mgr = CheckpointManager(str(tmp_path))
+    state = {"x": jnp.zeros(()), "step": jnp.zeros((), jnp.int32)}
+
+    def step_fn(state, batch):
+        if int(state["step"]) == 7:       # slow step, then SIGTERM
+            os.kill(os.getpid(), signal.SIGTERM)
+        return ({"x": state["x"] + 1.0, "step": state["step"] + 1},
+                {"loss": state["x"]})
+
+    from repro.runtime import StragglerMonitor
+    mon = StragglerMonitor(factor=2.0, warmup_steps=2)
+    for _ in range(6):
+        mon.record(0.01)
+    mon.record(0.5)                       # pre-flagged straggler
+    loop = RestartableLoop(mgr, state, total_steps=100, checkpoint_every=50,
+                           straggler=mon)
+    result = loop.run(step_fn, iter([{}] * 100))
+    assert result["emergency"] is True
+    _, meta = mgr.restore(target=state)
+    assert meta.get("emergency") is True
+    assert meta["stragglers"], "flagged straggler steps missing from meta"
+    assert meta["stragglers"][0] == [7, 0.5]
+    assert meta["median_step_s"] > 0.0
