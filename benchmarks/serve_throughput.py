@@ -213,6 +213,12 @@ def bench_one(args, arch: str):
           f"page_util={stats.page_util:.2f} "
           f"prefix_hit_rate={stats.prefix_hit_rate:.2f} "
           f"cow_splits={stats.cow_splits}")
+    if stats.mesh_shards > 1:
+        # page tables are replicated, so utilization is identical per shard;
+        # resident pool bytes are what actually split across the mesh
+        print(f"[{arch}] mesh_shards={stats.mesh_shards} "
+              f"page_util_per_shard={stats.page_util:.2f} "
+              f"pool_shard_bytes={stats.pool_shard_bytes}")
     if stats.prefix_mode == "radix":
         print(f"[{arch}] radix_nodes={stats.radix_nodes} "
               f"snapshot_hit_rate={stats.snapshot_hit_rate:.2f} "
@@ -223,11 +229,57 @@ def bench_one(args, arch: str):
     if ns.users > 0:
         print(f"[{arch}] personalize_frac={ns.personalize_frac} "
               f"users={ns.users} train_waves={stats.train_waves} "
-              f"wave_ms_per_token={stats.wave_s_per_token * 1e3:.2f} "
+              f"wave_ms_per_token={stats.train_wave_ms_per_token:.2f} "
               f"delta_hit_rate={stats.delta_hit_rate:.2f} "
               f"delta_resident_bytes={stats.delta_resident_bytes} "
               f"delta_evictions={stats.delta_evictions}")
     return stats
+
+
+def bench_mesh_sweep(args, arch: str):
+    """--mesh-sweep: run the workload at every power-of-two model-axis
+    width the host devices (and the arch's KV-head count) allow, and write
+    one record per width into BENCH_kernels.json next to the kernel
+    microbenchmarks."""
+    import json
+
+    import jax
+
+    rows = []
+    n = 1
+    while n <= len(jax.devices()):
+        ns = argparse.Namespace(**{**vars(args), "arch": arch,
+                                   "mesh_model": n, "mesh_sweep": False})
+        try:
+            stats = bench_one(ns, arch)
+        except ValueError as e:
+            print(f"[{arch}] mesh{n}: skipped ({e})")
+            n *= 2
+            continue
+        rows.append({
+            "op": "serve_paged_decode",
+            "variant": f"mesh{n}",
+            "shape": f"{arch}-b{ns.batch}-p{ns.prompt_len}-g{ns.gen_len}",
+            "mesh_shards": stats.mesh_shards,
+            "tok_per_s": round(stats.tok_per_s, 2),
+            "page_util_per_shard": round(stats.page_util, 4),
+            "pool_shard_bytes": stats.pool_shard_bytes,
+        })
+        n *= 2
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_kernels.json")
+    records = []
+    if os.path.exists(path):
+        with open(path) as f:
+            records = json.load(f)
+    keep = {(r["op"], r["variant"], r["shape"]) for r in rows}
+    records = [r for r in records
+               if (r.get("op"), r.get("variant"), r.get("shape")) not in keep]
+    records.extend(rows)
+    with open(path, "w") as f:
+        f.write(json.dumps(records, indent=1))
+    print(f"[{arch}] mesh sweep: {len(rows)} row(s) -> {path}")
+    return rows
 
 
 def main(argv=None):
@@ -238,8 +290,14 @@ def main(argv=None):
     ap.add_argument("--personalize-frac", type=float, default=0.0,
                     help="fraction of requests carrying a user id (per-user "
                          "delta decode + online train waves)")
+    ap.add_argument("--mesh-sweep", action="store_true",
+                    help="sweep --mesh-model over 1,2,4,... up to the host "
+                         "device count and append serve_paged_decode rows "
+                         "to BENCH_kernels.json")
     args = ap.parse_args(argv)
     archs = FAMILY_ARCHS if args.arch == "all" else (args.arch,)
+    if args.mesh_sweep:
+        return {arch: bench_mesh_sweep(args, arch) for arch in archs}
     return {arch: bench_one(args, arch) for arch in archs}
 
 

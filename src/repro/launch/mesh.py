@@ -19,3 +19,22 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_debug_mesh(n_data: int = 1, n_model: int = 1):
     """Small mesh over however many (host) devices exist — tests."""
     return make_mesh((n_data, n_model), ("data", "model"))
+
+
+def make_serve_mesh(n_model: int = 1):
+    """(1, n_model) serve mesh over the FIRST n_model local devices.
+
+    Unlike `make_mesh` (which lays out every device), serving wants exactly
+    the shard count asked for — e.g. 4 pool shards on an 8-device host —
+    so the mesh is built from an explicit device subset."""
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    if len(devs) < n_model:
+        raise ValueError(
+            f"serve mesh wants {n_model} model shards but only "
+            f"{len(devs)} device(s) exist")
+    return Mesh(np.asarray(devs[:n_model]).reshape(1, n_model),
+                ("data", "model"))

@@ -49,6 +49,12 @@ def build_engine(args, cfg=None):
         chaos = FaultSchedule(args.chaos_seed, fault_rate=args.fault_rate,
                               slow_s=args.chaos_slow_s,
                               kill_after=args.kill_after)
+    rules = None
+    if getattr(args, "mesh_model", 1) > 1:
+        from repro.launch.mesh import make_serve_mesh
+        from repro.sharding import default_rules
+        rules = default_rules(make_serve_mesh(args.mesh_model))
+    flash_decode = True if getattr(args, "flash_decode", False) else None
     engine = ServeEngine(
         cfg, params, num_slots=args.batch,
         max_len=args.prompt_len + args.gen_len,
@@ -60,7 +66,7 @@ def build_engine(args, cfg=None):
         personalization=p13n,
         chaos=chaos, max_retries=args.max_retries,
         shed_watermark=args.shed_watermark, watchdog_s=args.watchdog_s,
-        journal=args.journal)
+        journal=args.journal, rules=rules, flash_decode=flash_decode)
     return cfg, engine
 
 
@@ -162,6 +168,15 @@ def add_serve_args(ap: argparse.ArgumentParser):
     ap.add_argument("--kill-after", type=int, default=None,
                     help="inject a hard crash after N completed requests "
                          "(exercises journal replay + prefix persistence)")
+    ap.add_argument("--mesh-model", type=int, default=1,
+                    help="> 1: run paged decode through shard_map over a "
+                         "(1, N) device mesh — page pools shard over KV "
+                         "heads along the model axis, page tables and slot "
+                         "state stay replicated")
+    ap.add_argument("--flash-decode", action="store_true",
+                    help="force the flash-decoding split softmax (page-"
+                         "tiled online-softmax partials) even single-device;"
+                         " default: on when --mesh-model > 1, off otherwise")
     return ap
 
 
@@ -181,6 +196,9 @@ def main(argv=None):
           f"(util {stats.page_util:.2f}), "
           f"prefix hit rate {stats.prefix_hit_rate:.2f}, "
           f"{stats.cow_splits} COW splits")
+    if stats.mesh_shards > 1:
+        print(f"[serve] mesh: {stats.mesh_shards} model-axis shards, "
+              f"{stats.pool_shard_bytes} pool bytes/shard")
     if stats.prefix_mode == "radix":
         print(f"[serve] radix: {stats.radix_nodes} nodes, "
               f"snapshot hit rate {stats.snapshot_hit_rate:.2f} "
@@ -199,7 +217,7 @@ def main(argv=None):
     if args.users > 0:
         print(f"[serve] personalization: {args.users} users, "
               f"{stats.train_waves} train waves "
-              f"({stats.wave_s_per_token * 1e3:.2f}ms/token overhead), "
+              f"({stats.train_wave_ms_per_token:.2f}ms/token overhead), "
               f"delta hit rate {stats.delta_hit_rate:.2f}, "
               f"{stats.delta_resident_bytes} delta bytes resident, "
               f"{stats.delta_evictions} evictions")

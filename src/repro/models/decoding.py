@@ -48,6 +48,7 @@ from repro.models import moe as MOE
 from repro.models import rwkv6 as R
 from repro.models import transformer as T
 from repro.models.common import last_valid
+from repro import sharding as SH
 from repro.sharding import constrain
 
 
@@ -330,7 +331,8 @@ def _delta_sub(delta, *path):
 
 
 def _paged_block(cfg, kind: str, p, x, start, active, length, st_c, pl_c,
-                 page_table, page_size: int, delta=None):
+                 page_table, page_size: int, delta=None,
+                 flash_decode: bool = False):
     """One scan step of `paged_step`; mirrors `_decode_block` for s >= 1.
 
     `delta` carries this layer's per-batch-row compact weight deltas (see
@@ -343,7 +345,8 @@ def _paged_block(cfg, kind: str, p, x, start, active, length, st_c, pl_c,
                                           delta=d)
         a, pool = L.chunk_paged_attention(sub_p, cfg, h, start, active, pl,
                                           page_table, page_size=page_size,
-                                          length=length, delta=d)
+                                          length=length, delta=d,
+                                          flash_decode=flash_decode)
         return a, pool
 
     if kind in ("dense", "moe"):
@@ -415,7 +418,7 @@ def _paged_block(cfg, kind: str, p, x, start, active, length, st_c, pl_c,
 
 
 def paged_step(cfg, params, batch, state, pools, page_table, *,
-               page_size: int, deltas=None):
+               page_size: int, deltas=None, flash_decode: bool = False):
     """s >= 1 tokens per batch row against the paged serve caches.
 
     batch: {"tokens" [B,S] | "embeds" [B,S,d], "start" [B], "active" [B],
@@ -462,7 +465,7 @@ def paged_step(cfg, params, batch, state, pools, page_table, *,
             x = constrain(x, "batch", "seq", "model_d")
             x, st_out, pl_out = _paged_block(
                 cfg, seg.kind, p_l, x, start, active, length, st_l, pl_l,
-                page_table, page_size, delta=d_l)
+                page_table, page_size, delta=d_l, flash_decode=flash_decode)
             return x, (merge(st_out, st_l), pl_out)
 
         xs = (stack, state[seg.name], pools[seg.name])
@@ -477,6 +480,111 @@ def paged_step(cfg, params, batch, state, pools, page_table, *,
     logits = jnp.einsum("bd,dv->bv", x_last, w_head,
                         preferred_element_type=jnp.float32)
     return logits, new_state, new_pools
+
+
+# ---------------------------------------------------------------------------
+# sharded serving: paged_step through shard_map over the model axis
+#
+# Page pools shard over KV heads (logical axis "paged_pool" -> model); page
+# tables, batch rows, and per-slot recurrent/ring state stay replicated
+# ("page_table" -> None). Only the paged-attention projections run
+# head-parallel (wq/wk/wv by output head blocks, wo by input rows, one psum
+# after wo — see `layers.chunk_paged_attention`); every other layer computes
+# redundantly per shard so the replicated state stays consistent without
+# collectives. GQA head-block sharding keeps groups aligned: shard i holds
+# q heads [i*Hq/n, (i+1)*Hq/n) and kv heads [i*Hkv/n, (i+1)*Hkv/n), and
+# Hq/n = g * Hkv/n.
+# ---------------------------------------------------------------------------
+
+def validate_pool_sharding(cfg, rules) -> int:
+    """Number of model-axis shards the page pools will split into; raises
+    with a clear message when the head counts cannot shard that many ways
+    (silent mis-sharding would desync pools from their replicated page
+    tables)."""
+    if rules is None or rules.model_axis is None:
+        return 1
+    with SH.use_rules(rules):
+        n = SH.model_axis_size()     # raises if rules carry no mesh
+    if n == 1 or not has_paged_layers(cfg):
+        return n
+    if cfg.num_kv_heads % n != 0:
+        raise ValueError(
+            f"cannot shard page pools {n}-way over the model axis: "
+            f"num_kv_heads={cfg.num_kv_heads} is not divisible by the "
+            f"model-axis size {n} (pool leaves are [rows, Hkv, head_dim])")
+    if cfg.num_heads % n != 0:
+        raise ValueError(
+            f"cannot shard paged attention {n}-way over the model axis: "
+            f"num_heads={cfg.num_heads} is not divisible by the "
+            f"model-axis size {n}")
+    return n
+
+
+def pool_pspec(rules):
+    """PartitionSpec of every page-pool leaf [steps, rows, Hkv, head_dim]
+    under `rules` — the "paged_pool" logical rule on the KV-head axis."""
+    from jax.sharding import PartitionSpec as P
+    return P(None, None, rules.rules.get("paged_pool"), None)
+
+
+def paged_param_specs(cfg, params, rules):
+    """PartitionSpec tree for serve params: attention projections of PAGED
+    layers shard over the model axis; everything else (embeddings, norms,
+    MLPs, MoE, mamba/rwkv mixers, ring-attention layers) is replicated.
+    Leaves carry a leading scan-steps axis."""
+    from jax.sharding import PartitionSpec as P
+    axis = rules.model_axis
+    attn_spec = {"wq": P(None, None, axis), "wk": P(None, None, axis),
+                 "wv": P(None, None, axis), "wo": P(None, axis, None)}
+    specs = jax.tree.map(lambda _: P(), params)
+    for seg in T.segment_layout(cfg):
+        seg_spec = specs["segments"][seg.name]
+        for sub, role in _paged_layout(cfg, seg.kind):
+            if role != "paged":
+                continue
+            tgt = seg_spec if sub is None else seg_spec[sub]
+            tgt["attn"] = {k: attn_spec.get(k, P())
+                           for k in tgt["attn"]}
+    return specs
+
+
+def make_sharded_paged_step(cfg, rules, params, *, page_size: int,
+                            flash_decode: bool = True):
+    """Build a jitted `paged_step` that runs through shard_map over
+    `rules.model_axis`. Signature matches the single-device step
+    (`(params, batch, state, pools, page_table, deltas)`) except per-user
+    deltas are unsupported (must be None). `params` is only used for its
+    tree structure (in_specs are a full pytree over the param leaves)."""
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map
+
+    mesh, axis = rules.mesh, rules.model_axis
+    validate_pool_sharding(cfg, rules)
+
+    def body(p, batch, state, pools, pt):
+        # inside shard_map arrays are per-shard locals: GSPMD constraints
+        # (use_rules) do not apply, and paged wo partials psum over `axis`
+        with SH.use_rules(None), SH.mapped_model_axis(axis):
+            return paged_step(cfg, p, batch, state, pools, pt,
+                              page_size=page_size,
+                              flash_decode=flash_decode)
+
+    mapped = shard_map(
+        body, mesh=mesh,
+        in_specs=(paged_param_specs(cfg, params, rules),
+                  P(), P(), pool_pspec(rules), P()),
+        out_specs=(P(), P(), pool_pspec(rules)),
+        check_vma=False)
+    step = jax.jit(mapped)
+
+    def call(p, batch, state, pools, pt, deltas=None):
+        if deltas is not None:
+            raise ValueError(
+                "sharded serving does not support per-user deltas")
+        return step(p, batch, state, pools, pt)
+
+    call._cache_size = getattr(step, "_cache_size", lambda: -1)
+    return call
 
 
 # ---------------------------------------------------------------------------

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from repro.core.sparse_update import smm
 from repro.models.common import delta_matmul_add, dense_init
-from repro.sharding import constrain
+from repro.sharding import constrain, psum_mapped
 
 # ---------------------------------------------------------------------------
 # Norms
@@ -130,12 +130,15 @@ def init_attention(key, cfg, dtype):
 def _qkv(p, cfg, x, positions, sel=None, delta=None):
     b, s, d = x.shape
     hd = cfg.resolved_head_dim
+    # head counts come from the projection widths, not cfg: inside a
+    # shard_map over the model axis each shard holds a head-block of
+    # wq/wk/wv, so the local head count is cfg's divided by the shard count
     q = delta_matmul_add(smm(x, p["wq"], sel, "wq"), x, delta, "wq") \
-        .reshape(b, s, cfg.num_heads, hd)
+        .reshape(b, s, -1, hd)
     k = delta_matmul_add(smm(x, p["wk"], sel, "wk"), x, delta, "wk") \
-        .reshape(b, s, cfg.num_kv_heads, hd)
+        .reshape(b, s, -1, hd)
     v = delta_matmul_add(smm(x, p["wv"], sel, "wv"), x, delta, "wv") \
-        .reshape(b, s, cfg.num_kv_heads, hd)
+        .reshape(b, s, -1, hd)
     if getattr(cfg, "mrope", False):
         q = apply_mrope(q, positions, cfg.rope_theta)
         k = apply_mrope(k, positions, cfg.rope_theta)
@@ -371,10 +374,14 @@ def decode_attention(p, cfg, x, positions, cache, *, window: int = 0):
 # depends on write ordering (a ring buffer may overwrite its own chunk).
 # ---------------------------------------------------------------------------
 
-def _grouped_scores(q, k_cat, v_cat, mask, cfg):
-    """q: [B,S,Hq,D]; k_cat/v_cat: [B,L,Hkv,D]; mask: [B,S,L] -> [B,S,Hq*D]."""
+def _grouped_scores(q, k_cat, v_cat, mask, cfg=None):
+    """q: [B,S,Hq,D]; k_cat/v_cat: [B,L,Hkv,D]; mask: [B,S,L] -> [B,S,Hq*D].
+
+    Hkv comes from k_cat, not cfg: under head-sharded serving each shard
+    sees a local head-block (Hq_loc = g * Hkv_loc keeps the GQA grouping
+    aligned, so the monolithic reshape below stays correct per shard)."""
     b, s, hq, hd = q.shape
-    hkv = cfg.num_kv_heads
+    hkv = k_cat.shape[2]
     g = hq // hkv
     qg = q.reshape(b, s, hkv, g, hd)
     scores = jnp.einsum("bshgd,blhd->bhgsl", qg, k_cat,
@@ -384,6 +391,60 @@ def _grouped_scores(q, k_cat, v_cat, mask, cfg):
     out = jnp.einsum("bhgsl,blhd->bshgd", probs.astype(q.dtype), v_cat,
                      preferred_element_type=jnp.float32).astype(q.dtype)
     return out.reshape(b, s, hq * hd)
+
+
+def _grouped_scores_split(q, k_cat, v_cat, mask, tile: int):
+    """Flash-decoding form of `_grouped_scores`: the KV length is split
+    into `tile`-sized blocks (one page per block in the serve engine), each
+    block contributes an (out, lse)-style partial, and partials merge with
+    the online-softmax update from `_flash_fwd_impl` — so long contexts
+    reduce over pages instead of materializing one [B,Hq,S,L] score tensor.
+    Matches the monolithic softmax to float32 roundoff.
+    """
+    b, s, hq, hd = q.shape
+    hkv = k_cat.shape[2]
+    g = hq // hkv
+    L = k_cat.shape[1]
+    nt = -(-L // tile)
+    pad = nt * tile - L
+    if pad:
+        zkv = jnp.zeros((b, pad) + k_cat.shape[2:], k_cat.dtype)
+        k_cat = jnp.concatenate([k_cat, zkv], axis=1)
+        v_cat = jnp.concatenate([v_cat, zkv], axis=1)
+        mask = jnp.concatenate(
+            [mask, jnp.zeros((b, s, pad), mask.dtype)], axis=2)
+
+    qg = q.reshape(b, s, hkv, g, hd)
+    scale = 1.0 / math.sqrt(hd)
+    # tiles to the front so lax.scan walks pages: [NT, B, tile, ...]
+    kt = jnp.moveaxis(k_cat.reshape(b, nt, tile, hkv, hd), 1, 0)
+    vt = jnp.moveaxis(v_cat.reshape(b, nt, tile, hkv, hd), 1, 0)
+    mt = jnp.moveaxis(mask.reshape(b, s, nt, tile), 2, 0)
+
+    m0 = jnp.full((b, hkv, g, s), -1e30, jnp.float32)       # running max
+    l0 = jnp.zeros((b, hkv, g, s), jnp.float32)             # running denom
+    o0 = jnp.zeros((b, hkv, g, s, hd), jnp.float32)         # running numer
+
+    def merge(carry, blk):
+        m, l, o = carry
+        k_b, v_b, msk = blk
+        sc = jnp.einsum("bshgd,bthd->bhgst", qg, k_b,
+                        preferred_element_type=jnp.float32) * scale
+        sc = jnp.where(msk[:, None, None, :, :], sc, -1e30)
+        blk_m = sc.max(axis=-1)
+        m_new = jnp.maximum(m, blk_m)
+        p = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bhgst,bthd->bhgsd", p.astype(q.dtype), v_b,
+                        preferred_element_type=jnp.float32)
+        o = o * corr[..., None] + pv
+        return (m_new, l, o), None
+
+    (m, l, o), _ = jax.lax.scan(merge, (m0, l0, o0), (kt, vt, mt))
+    out = o / jnp.maximum(l[..., None], 1e-30)              # [B,Hkv,G,S,D]
+    out = jnp.moveaxis(out, 3, 1)                           # [B,S,Hkv,G,D]
+    return out.astype(q.dtype).reshape(b, s, hq * hd)
 
 
 def _serve_positions(cfg, start, s):
@@ -449,7 +510,8 @@ def chunk_ring_attention(p, cfg, x, start, active, cache, *, window: int,
 
 
 def chunk_paged_attention(p, cfg, x, start, active, pool, page_table, *,
-                          page_size: int, length=None, delta=None):
+                          page_size: int, length=None, delta=None,
+                          flash_decode: bool = False):
     """Full (window-free) attention for a chunk of s tokens per batch row,
     reading and writing K/V through per-row page tables.
 
@@ -485,7 +547,10 @@ def chunk_paged_attention(p, cfg, x, start, active, pool, page_table, *,
     k_cat = jnp.concatenate([k_cache.astype(k.dtype), k], axis=1)
     v_cat = jnp.concatenate([v_cache.astype(v.dtype), v], axis=1)
     mask = jnp.concatenate([cache_mask, chunk_mask], axis=2)
-    out = _grouped_scores(q, k_cat, v_cat, mask, cfg)
+    if flash_decode:
+        out = _grouped_scores_split(q, k_cat, v_cat, mask, tile=ps)
+    else:
+        out = _grouped_scores(q, k_cat, v_cat, mask, cfg)
 
     # write the chunk rows: logical position -> page_table page; unallocated
     # pages / inactive rows land out of bounds and are dropped
@@ -499,7 +564,10 @@ def chunk_paged_attention(p, cfg, x, start, active, pool, page_table, *,
     v_pool = pool["v"].at[dest].set(
         v.reshape(b * s, *v.shape[2:]).astype(pool["v"].dtype), mode="drop")
     y = delta_matmul_add(smm(out, p["wo"], None, "wo"), out, delta, "wo")
-    return y, {"k": k_pool, "v": v_pool}
+    # under head-sharded serving each shard's wo rows cover only its local
+    # heads, so y is a partial sum — reduce over the mapped model axis
+    # (identity outside shard_map)
+    return psum_mapped(y), {"k": k_pool, "v": v_pool}
 
 
 def init_kv_cache(cfg, batch: int, seq_len: int, *, window: int = 0, dtype=None):

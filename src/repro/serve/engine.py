@@ -128,6 +128,7 @@ class ServeStats:
     # prefix-reuse internals (zero when prefix_mode != "radix")
     prefix_mode: str = "off"
     prefix_lookups: int = 0         # admission-time cache lookups
+    state_lookups: int = 0          # lookups that asked for a state snapshot
     radix_nodes: int = 0            # tree nodes at end of run
     snapshot_hits: int = 0          # matches that restored recurrent state
     snapshots_stored: int = 0
@@ -154,6 +155,9 @@ class ServeStats:
     stream_errors: int = 0          # stream-callback exceptions absorbed
     journal_replays: int = 0        # re-admissions recovered from the journal
     stragglers: int = 0             # engine iterations flagged as stragglers
+    # sharded serving (defaults = single-device engine)
+    mesh_shards: int = 1            # model-axis shards the pools split into
+    pool_shard_bytes: int = 0       # page-pool bytes resident per shard
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -165,16 +169,23 @@ class ServeStats:
 
     @property
     def snapshot_hit_rate(self) -> float:
-        return self.snapshot_hits / max(1, self.prefix_lookups)
+        """Snapshot hits over STATE-FAMILY lookups only. Attention-family
+        lookups never ask for a snapshot, so denominating by ALL prefix
+        lookups (the old behaviour) diluted the rate toward zero on mixed
+        llama3+jamba workloads."""
+        return self.snapshot_hits / max(1, self.state_lookups)
 
     @property
     def delta_hit_rate(self) -> float:
         return self.delta_hits / max(1, self.delta_lookups)
 
     @property
-    def wave_s_per_token(self) -> float:
-        """Train-wave overhead amortized over every decoded token."""
-        return self.train_wave_s / max(1, self.tokens_out)
+    def train_wave_ms_per_token(self) -> float:
+        """Train-wave overhead in MILLISECONDS amortized over every decoded
+        token. `train_wave_s` is seconds; the former `wave_s_per_token`
+        name left the *1e3 to each call site — one missed conversion
+        under-reported wave cost by 1000x, so the property now owns it."""
+        return self.train_wave_s * 1e3 / max(1, self.tokens_out)
 
 
 class ServeEngine:
@@ -194,7 +205,8 @@ class ServeEngine:
                  retry_backoff_cap_s: float = 0.1,
                  shed_watermark: float = 0.0,
                  watchdog_s: Optional[float] = None,
-                 journal=None, straggler_factor: float = 2.5):
+                 journal=None, straggler_factor: float = 2.5,
+                 rules=None, flash_decode: Optional[bool] = None):
         assert num_slots >= 1 and max_len >= 2 and page_size >= 1
         assert prefix_mode in ("radix", "chain", "off")
         assert max_retries >= 0 and 0.0 <= shed_watermark < 1.0
@@ -272,10 +284,42 @@ class ServeEngine:
         self._zero_key = jax.random.PRNGKey(0)
         self._decode_length = jnp.ones((num_slots,), jnp.int32)
 
+        # sharded serving: with AxisRules carrying a mesh + model axis, the
+        # step runs through shard_map — page pools shard over KV heads, page
+        # tables / batch / slot state stay replicated (see models/decoding
+        # `make_sharded_paged_step`). flash_decode defaults on when sharded
+        # (that is the point of splitting long contexts across cores) and
+        # off single-device, keeping that path bit-identical.
+        self.rules = rules
+        self.mesh_shards = 1
+        if rules is not None:
+            if rules.mesh is None or rules.model_axis is None:
+                raise ValueError(
+                    "sharded serving needs AxisRules built from a mesh with "
+                    f"a model axis (got mesh={rules.mesh!r}, "
+                    f"model_axis={rules.model_axis!r})")
+            if personalization is not None:
+                raise ValueError(
+                    "sharded serving does not support per-user deltas")
+            self.mesh_shards = D.validate_pool_sharding(cfg, rules)
+        self.flash_decode = flash_decode if flash_decode is not None \
+            else rules is not None
+
         ps = page_size
-        self._step = jax.jit(
-            lambda p, batch, state, pools, pt, deltas: D.paged_step(
-                cfg, p, batch, state, pools, pt, page_size=ps, deltas=deltas))
+        if rules is not None:
+            from repro.sharding import spec_tree_to_shardings
+            self.params = params = jax.device_put(
+                params, spec_tree_to_shardings(
+                    rules.mesh, D.paged_param_specs(cfg, params, rules)))
+            self._step = D.make_sharded_paged_step(
+                cfg, rules, params, page_size=ps,
+                flash_decode=self.flash_decode)
+        else:
+            fd = self.flash_decode
+            self._step = jax.jit(
+                lambda p, batch, state, pools, pt, deltas: D.paged_step(
+                    cfg, p, batch, state, pools, pt, page_size=ps,
+                    deltas=deltas, flash_decode=fd))
         self._extract = jax.jit(D.cache_extract_row)
         self._insert = jax.jit(D.cache_insert_row)
         self._reset = jax.jit(D.cache_reset_row)
@@ -670,6 +714,15 @@ class ServeEngine:
         state, self._pools = D.init_serve_cache(
             self.cfg, self.num_slots, self.max_len,
             max(1, self.num_pages), self.page_size)
+        if self.rules is not None:
+            # pools shard over KV heads along the model axis; state and the
+            # page table stay replicated (host-side np array, see below)
+            from jax.sharding import NamedSharding
+            shard = NamedSharding(self.rules.mesh, D.pool_pspec(self.rules))
+            self._pools = jax.tree.map(
+                lambda a: jax.device_put(a, shard), self._pools)
+        self._pool_bytes = sum(a.size * a.dtype.itemsize
+                               for a in jax.tree.leaves(self._pools))
         self._pt = np.full((self.num_slots, self.max_pages), -1, np.int32)
         self._pool = PagePool(max(1, self.num_pages), self.page_size,
                               chaos=self.chaos)
@@ -1002,6 +1055,7 @@ class ServeEngine:
             results=results,
             prefix_mode=self.prefix_mode,
             prefix_lookups=(c.lookups if c is not None else 0),
+            state_lookups=(c.state_lookups if c is not None else 0),
             radix_nodes=(c.node_count if c is not None else 0),
             snapshot_hits=(c.snapshot_hits if c is not None else 0),
             snapshots_stored=(c.snapshots_stored if c is not None else 0),
@@ -1029,6 +1083,8 @@ class ServeEngine:
             stream_errors=self._stream_errors,
             journal_replays=journal_replays,
             stragglers=len(mon.flagged),
+            mesh_shards=self.mesh_shards,
+            pool_shard_bytes=self._pool_bytes // max(1, self.mesh_shards),
         )
 
 

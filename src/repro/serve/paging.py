@@ -185,6 +185,7 @@ class MatchResult:
     covered: int
     snapshot: Any = None
     node: Any = None        # pinned tree node (None for the chain baseline)
+    state: bool = False     # lookup asked for a snapshot (state family)
 
 
 class SpillTier:
@@ -301,6 +302,7 @@ class RadixPrefixCache:
         self.hit_tokens = 0
         self.lookup_tokens = 0
         self.lookups = 0
+        self.state_lookups = 0      # lookups with need_state (state family)
         self.snapshot_hits = 0
         self.snapshots_stored = 0
         self.snapshot_bytes = 0
@@ -424,6 +426,10 @@ class RadixPrefixCache:
         tokens = _as_tokens(tokens)
         self.lookup_tokens += len(tokens)
         self.lookups += 1
+        if need_state:
+            # snapshot_hit_rate denominates by these, not all lookups:
+            # attention-family traffic never asks for snapshots
+            self.state_lookups += 1
         node, covered = self._root, 0
         pages: list[int] = []
         snap_node, snap_at = None, 0
@@ -508,7 +514,7 @@ class RadixPrefixCache:
             pin.pins += 1
         self.hit_tokens += covered
         return MatchResult(pages=out, covered=covered, snapshot=snapshot,
-                           node=pin)
+                           node=pin, state=need_state)
 
     def abandon(self, mr: MatchResult, lookup_tokens: int) -> None:
         """Roll back a `match` whose admission was deferred: release the
@@ -519,6 +525,8 @@ class RadixPrefixCache:
         self.hit_tokens -= mr.covered
         self.lookup_tokens -= lookup_tokens
         self.lookups -= 1
+        if mr.state:
+            self.state_lookups -= 1
         if mr.snapshot is not None:
             self.snapshot_hits -= 1
         self.release(mr)
@@ -872,6 +880,7 @@ class ChainPrefixCache:
         self.hit_tokens = 0
         self.lookup_tokens = 0
         self.lookups = 0
+        self.state_lookups = 0      # always 0: no snapshots in the baseline
         self.snapshot_hits = 0
         self.snapshots_stored = 0
         self.snapshot_bytes = 0

@@ -26,6 +26,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 #   expert     - MoE expert                    -> "model"
 #   layers     - stacked-layer leading axis    -> None
 #   d_inner    - mamba/rwkv inner channels     -> "model"
+#   paged_pool - serve page-pool KV-head axis  -> "model"
+#   page_table - per-slot page tables          -> None (replicated host state)
 
 _STATE = threading.local()
 
@@ -67,6 +69,8 @@ def default_rules(mesh: Mesh) -> AxisRules:
         "layers": None,
         "d_inner": model_axis,
         "sel": None,
+        "paged_pool": model_axis,
+        "page_table": None,
     }
     return AxisRules(rules, mesh=mesh, batch_axes=batch_axes, model_axis=model_axis)
 
@@ -121,9 +125,43 @@ def named_sharding(*logical: Optional[str]) -> Optional[NamedSharding]:
 
 def model_axis_size() -> int:
     r = current_rules()
-    if r is None or r.mesh is None or r.model_axis is None:
+    if r is None or r.model_axis is None:
         return 1
+    if r.mesh is None:
+        # Rules that name a model axis but carry no mesh used to fall back
+        # to 1 here, silently desyncing sharded pool shapes from their
+        # replicated page tables. Refuse instead.
+        raise ValueError(
+            "AxisRules name a model axis "
+            f"({r.model_axis!r}) but carry no mesh; model_axis_size() "
+            "cannot be resolved. Install rules built from a mesh "
+            "(e.g. default_rules(mesh)).")
     return r.mesh.shape[r.model_axis]
+
+
+@contextlib.contextmanager
+def mapped_model_axis(name: Optional[str]):
+    """Mark that model code is tracing INSIDE a shard_map over mesh axis
+    `name`: arrays are per-shard locals there, so `constrain` rules do not
+    apply and row-sharded matmul partials need an explicit psum
+    (`psum_mapped`)."""
+    prev = getattr(_STATE, "mapped_axis", None)
+    _STATE.mapped_axis = name
+    try:
+        yield
+    finally:
+        _STATE.mapped_axis = prev
+
+
+def current_mapped_axis() -> Optional[str]:
+    return getattr(_STATE, "mapped_axis", None)
+
+
+def psum_mapped(x):
+    """Sum partial matmul results over the mapped model axis; identity
+    outside a shard_map (where GSPMD inserts its own collectives)."""
+    ax = current_mapped_axis()
+    return x if ax is None else jax.lax.psum(x, ax)
 
 
 def spec_tree_to_shardings(mesh: Mesh, spec_tree):

@@ -1,0 +1,72 @@
+"""ServeStats unit/denominator regressions (PR-9 satellite bugfixes).
+
+1. `train_wave_ms_per_token` owns the seconds->milliseconds conversion:
+   the former `wave_s_per_token` left the *1e3 to each call site, and one
+   missed conversion under-reported wave cost by 1000x.
+2. `snapshot_hit_rate` denominates by STATE-FAMILY lookups only: llama3
+   (attention family) traffic never asks for snapshots, so dividing by all
+   prefix lookups diluted the rate toward zero on mixed fleets.
+"""
+import jax
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import transformer as T
+from repro.serve import ServeEngine
+from repro.serve.engine import ServeStats, make_shared_prefix_requests
+
+PAGE = 4
+
+
+def _stats(**over):
+    base = dict(requests_completed=0, requests_cancelled=0, tokens_out=0,
+                tokens_cancelled=0, wall_s=0.0, tok_per_s=0.0,
+                latency_p50_s=0.0, latency_p95_s=0.0, refills=0,
+                prefill_chunks=0, prefix_hit_tokens=0, prefix_lookup_tokens=0,
+                pages_total=0, pages_peak=0, cow_splits=0, results={})
+    base.update(over)
+    return ServeStats(**base)
+
+
+def test_train_wave_ms_per_token_unit():
+    # 2 seconds of wave time over 1000 tokens = 2 ms/token, NOT 0.002
+    s = _stats(train_wave_s=2.0, tokens_out=1000)
+    assert s.train_wave_ms_per_token == pytest.approx(2.0)
+    # the seconds-named property is gone so no call site can double-convert
+    assert not hasattr(s, "wave_s_per_token")
+    assert _stats().train_wave_ms_per_token == 0.0
+
+
+def test_snapshot_hit_rate_unit():
+    # 3 snapshot hits over 4 state-family lookups; the 20 attention-family
+    # lookups in the same window must not dilute the rate
+    s = _stats(prefix_lookups=24, state_lookups=4, snapshot_hits=3)
+    assert s.snapshot_hit_rate == pytest.approx(0.75)
+
+
+def _run(arch, seed=3):
+    cfg = get_smoke_config(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, params, num_slots=2, max_len=20,
+                         page_size=PAGE, num_pages=16)
+    return engine.run(make_shared_prefix_requests(
+        cfg, 6, prefix_len=12, prompt_len=14, gen_len=5, seed=seed))
+
+
+def test_snapshot_hit_rate_mixed_llama3_jamba_workload():
+    sj = _run("jamba-1.5-large-398b")       # hybrid state family
+    sl = _run("llama3-8b")                  # attention family
+    # jamba: every admission asks for state; later ones hit snapshots
+    assert sj.state_lookups > 0 and sj.snapshot_hits > 0
+    assert sj.snapshot_hit_rate == pytest.approx(
+        sj.snapshot_hits / sj.state_lookups)
+    # llama3 performs prefix lookups but never state lookups
+    assert sl.prefix_lookups > 0 and sl.state_lookups == 0
+    assert sl.snapshot_hits == 0
+    # mixed-fleet aggregate: the state-family denominator keeps the rate
+    # undiluted; the old all-lookups denominator dragged it down
+    hits = sj.snapshot_hits + sl.snapshot_hits
+    fixed = hits / max(1, sj.state_lookups + sl.state_lookups)
+    diluted = hits / max(1, sj.prefix_lookups + sl.prefix_lookups)
+    assert fixed == pytest.approx(sj.snapshot_hit_rate)
+    assert diluted < fixed
