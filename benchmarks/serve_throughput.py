@@ -236,14 +236,49 @@ def bench_one(args, arch: str):
     return stats
 
 
+def _per_shard_prefill_flops_per_token(cfg, rules):
+    """Analytic matmul FLOPs one shard spends per prefill token under the
+    serve sharding policy: 2 * prod(LOCAL dims) summed over every rank >= 2
+    weight leaf (sharded dims divided by the mesh width; the embedding
+    table is a gather, not a matmul). With every layer tensor-parallel this
+    drops ~1/N per shard as the mesh widens."""
+    import jax
+
+    from repro.models import decoding as D
+    from repro.models import transformer as T
+
+    params = jax.eval_shape(
+        lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+    specs = D.paged_param_specs(cfg, params, rules)
+    axis = rules.model_axis
+    n = rules.mesh.shape[axis] if axis else 1
+    total = 0
+    flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: x is None)
+    for (path, leaf), spec in zip(flat_p, flat_s):
+        keys = [str(getattr(k, "key", "")) for k in path]
+        if len(leaf.shape) < 2 or keys[-1] == "tok":
+            continue
+        size = 1
+        for i, d in enumerate(leaf.shape):
+            size *= d // n if (i < len(spec) and spec[i] is not None) else d
+        total += 2 * size
+    return total
+
+
 def bench_mesh_sweep(args, arch: str):
     """--mesh-sweep: run the workload at every power-of-two model-axis
     width the host devices (and the arch's KV-head count) allow, and write
     one record per width into BENCH_kernels.json next to the kernel
-    microbenchmarks."""
+    microbenchmarks. Each row splits prefill tok/s from decode tok/s and
+    carries the analytic per-shard prefill FLOPs/token; --personalize-frac
+    composes (deltas ride the sharded step), adding train-wave counts."""
     import json
 
     import jax
+
+    from repro.launch.mesh import make_serve_mesh
+    from repro.sharding import default_rules
 
     rows = []
     n = 1
@@ -256,15 +291,27 @@ def bench_mesh_sweep(args, arch: str):
             print(f"[{arch}] mesh{n}: skipped ({e})")
             n *= 2
             continue
-        rows.append({
+        from repro.configs import get_config, get_smoke_config
+        cfg = (get_smoke_config(ns.arch) if ns.smoke
+               else get_config(ns.arch))
+        flops = _per_shard_prefill_flops_per_token(
+            cfg, default_rules(make_serve_mesh(n)))
+        row = {
             "op": "serve_paged_decode",
             "variant": f"mesh{n}",
             "shape": f"{arch}-b{ns.batch}-p{ns.prompt_len}-g{ns.gen_len}",
             "mesh_shards": stats.mesh_shards,
             "tok_per_s": round(stats.tok_per_s, 2),
+            "prefill_tok_per_s": round(stats.prefill_tok_per_s, 2),
+            "decode_tok_per_s": round(stats.decode_tok_per_s, 2),
+            "prefill_flops_per_tok_per_shard": flops,
             "page_util_per_shard": round(stats.page_util, 4),
             "pool_shard_bytes": stats.pool_shard_bytes,
-        })
+        }
+        if ns.personalize_frac > 0:
+            row["personalize_frac"] = ns.personalize_frac
+            row["train_waves"] = stats.train_waves
+        rows.append(row)
         n *= 2
     path = os.path.join(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))), "BENCH_kernels.json")

@@ -436,6 +436,48 @@ def kernel_launch_breakdown(obj) -> dict[str, int]:
     return out
 
 
+# ---------------------------------------------------------------------------
+# tensor-parallel replication audit (sharded serving verification)
+# ---------------------------------------------------------------------------
+#
+# The serve mesh promises per-shard FLOPs ~1/N on every weight matmul whose
+# sharded dim divides the mesh (models/decoding `paged_param_specs`). That
+# property reverts SILENTLY: dropping a leaf's PartitionSpec makes the leaf
+# arrive replicated inside the shard_map, the shape-based fallback in model
+# code happily runs the full-size matmul on every shard, and tokens stay
+# correct — only the FLOP saving is gone. The audit makes that revert loud:
+# trace the sharded step, walk every sub-jaxpr (shard_map bodies carry LOCAL
+# shapes), and flag any dot_general consuming an operand whose shape equals
+# the FULL per-step shape of a leaf the sharding policy says must shard.
+# `models/decoding.sharded_param_shapes` builds the forbidden set and the
+# allowlist (policy-replicated leaves, e.g. indivisible rwkv head mats) from
+# the same divisibility rules the spec builder uses.
+
+
+def replicated_matmul_leaves(fn, args, forbidden_shapes) -> list[tuple]:
+    """Shapes of dot_general operands in `fn(*args)`'s jaxpr that match a
+    forbidden (full, unsharded) weight shape — empty means every policy-
+    sharded matmul really ran on its local shard. Recurses through
+    shard_map / scan / while / pjit / remat bodies."""
+    import jax as _jax
+    forbidden = {tuple(s) for s in forbidden_shapes}
+    hits: list[tuple] = []
+
+    def walk(jx):
+        for eqn in jx.eqns:
+            if eqn.primitive.name == "dot_general":
+                for v in eqn.invars:
+                    shape = tuple(getattr(v.aval, "shape", ()))
+                    if shape in forbidden:
+                        hits.append(shape)
+            for val in eqn.params.values():
+                for sub in _iter_sub_jaxprs(val):
+                    walk(sub)
+
+    walk(_jax.make_jaxpr(fn)(*args).jaxpr)
+    return hits
+
+
 def while_trip_counts(text: str) -> list[int]:
     comps = parse_hlo(text)
     out = []

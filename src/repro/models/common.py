@@ -1,9 +1,24 @@
-"""Shared model utilities: init, dtype policy, pytree param helpers."""
+"""Shared model utilities: init, dtype policy, pytree param helpers, and the
+parallel-linear primitives (`col_matmul` / `row_matmul` / vocab-parallel
+gather + logits) every layer in the zoo is built from.
+
+Outside a shard_map all primitives reduce exactly to their single-device
+spelling (`smm` + `delta_matmul_add`), so training and the single-device
+serve path stay bit-identical. Inside a shard_map (serve mesh) they detect
+whether the weight actually arrived sharded — the spec builder only shards
+divisible dims — and fall back to replicated math otherwise, so indivisible
+leaves (e.g. rwkv time-mix mats with H % shards != 0) degrade gracefully.
+"""
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.sparse_update import smm
+from repro import sharding as SH
 
 
 def dtype_of(cfg) -> jnp.dtype:
@@ -66,6 +81,117 @@ def delta_matmul_add(y, x, delta, name: str):
     # dims [B, h, j] lead, so move extra's seq axis after the index axes
     yb = yb.at[rows, :, shards, idx].add(extra.transpose(0, 2, 3, 1, 4))
     return yb.reshape(b, s, n).astype(y.dtype)
+
+
+def _delta_one(name: str, val, idx):
+    return {"val": {name: val}, "idx": {name: idx}}
+
+
+def _delta_local_col(y, x, delta, name: str, full_out: int, ax):
+    """Apply a compact delta to a COLUMN-sharded output: each shard adds only
+    the selected blocks it owns, so the correction needs no collective and is
+    bit-identical to the single-device `delta_matmul_add` (non-owned blocks
+    contribute exact zeros)."""
+    val, idx = delta["val"][name], delta["idx"][name]
+    n_loc = y.shape[-1]
+    tp = full_out // n_loc
+    shard = jax.lax.axis_index(ax)
+    n_shards, n_sel, block = val.shape[-3:]
+    if n_shards % tp == 0:
+        # Selection layout is TP-aligned (equal blocks per shard, indices
+        # local to each selection shard): slice this shard's shards.
+        k = n_shards // tp
+        val = jax.lax.dynamic_slice_in_dim(val, shard * k, k, axis=-3)
+        idx = jax.lax.dynamic_slice_in_dim(idx, shard * k, k, axis=-2)
+        return delta_matmul_add(y, x, _delta_one(name, val, idx), name)
+    if n_shards == 1 and n_loc % block == 0:
+        # Global block indices: mask to the blocks this shard owns; zeroed
+        # val rows are an exact no-op in the scatter-add.
+        bps = n_loc // block
+        own = (idx // bps) == shard                      # [B, 1, n_sel]
+        idx_loc = jnp.where(own, idx - shard * bps, 0)
+        val_loc = jnp.where(own[:, None, :, :, None], val, 0.0)
+        return delta_matmul_add(y, x, _delta_one(name, val_loc, idx_loc),
+                                name)
+    # Misaligned block size: scatter into a full-width zero buffer and slice
+    # the local columns (still exact: y + (0 + extra) == y + extra in f32).
+    yf = jnp.zeros(y.shape[:-1] + (full_out,), jnp.float32)
+    yf = delta_matmul_add(yf, x, delta, name)
+    corr = jax.lax.dynamic_slice_in_dim(yf, shard * n_loc, n_loc, axis=-1)
+    return (y.astype(jnp.float32) + corr).astype(y.dtype)
+
+
+def col_matmul(x, w, sel, name: str, delta=None, *,
+               full_out: Optional[int] = None):
+    """Column-parallel linear: weight sharded on the OUTPUT axis, so the
+    local matmul needs no collective and the result stays sharded on its
+    last axis. Exactly `delta_matmul_add(smm(x, w, sel, name), ...)` outside
+    a shard_map or when the weight arrived replicated (`w.shape[-1] ==
+    full_out`); pass `full_out` wherever a delta may ride along on a mesh."""
+    y = smm(x, w, sel, name)
+    if delta is None or name not in delta["val"]:
+        return y
+    ax = SH.current_mapped_axis()
+    if ax is None or full_out is None or w.shape[-1] == full_out:
+        return delta_matmul_add(y, x, delta, name)
+    return _delta_local_col(y, x, delta, name, full_out, ax)
+
+
+def row_matmul(x, w, sel, name: str, delta=None, *,
+               full_in: Optional[int] = None):
+    """Row-parallel linear: weight sharded on the INPUT axis (x holds the
+    matching local slice), one psum over the mapped axis reassembles the
+    full output. Reduces to a plain `smm` (+ delta) outside a shard_map or
+    when the weight arrived replicated (`w.shape[-2] == full_in`). A delta
+    contracts over the sharded input axis, so each shard applies its d_in
+    slice of the compact correction before the psum — the reduction
+    reassembles the full `x @ delta`."""
+    y = smm(x, w, sel, name)
+    ax = SH.current_mapped_axis()
+    sharded = (ax is not None and full_in is not None
+               and w.shape[-2] != full_in)
+    if delta is not None and name in delta["val"]:
+        d = delta
+        if sharded:
+            d_loc = w.shape[-2]
+            shard = jax.lax.axis_index(ax)
+            val = jax.lax.dynamic_slice_in_dim(
+                delta["val"][name], shard * d_loc, d_loc, axis=1)
+            d = _delta_one(name, val, delta["idx"][name])
+        y = delta_matmul_add(y, x, d, name)
+    return jax.lax.psum(y, ax) if sharded else y
+
+
+def vocab_parallel_gather(emb, ids, vocab_size: int):
+    """Embedding lookup that works on a vocab-sharded table: each shard
+    gathers the rows it owns (out-of-shard ids clipped, their rows masked to
+    exact zero) and a psum reassembles the full embedding — each token's row
+    lives on exactly one shard, so the sum is bit-exact. Plain `jnp.take`
+    outside a shard_map or when the table arrived replicated."""
+    ax = SH.current_mapped_axis()
+    v_loc = emb.shape[0]
+    if ax is None or v_loc == vocab_size:
+        return jnp.take(emb, ids, axis=0)
+    shard = jax.lax.axis_index(ax)
+    local = ids - shard * v_loc
+    in_range = (local >= 0) & (local < v_loc)
+    rows = jnp.take(emb, jnp.clip(local, 0, v_loc - 1), axis=0)
+    rows = jnp.where(in_range[..., None], rows, 0).astype(emb.dtype)
+    return jax.lax.psum(rows, ax)
+
+
+def vocab_parallel_logits(x, w_head, vocab_size: int):
+    """LM head on a vocab-sharded weight: the [B, d] x [d, V/n] matmul runs
+    on the local vocab shard (the FLOPs win), then a tiled all_gather
+    reassembles the full [B, V] logits — column blocks are concatenated in
+    shard order, so values are bit-identical to the unsharded einsum up to
+    layout. Plain einsum outside a shard_map or when replicated."""
+    logits = jnp.einsum("bd,dv->bv", x, w_head,
+                        preferred_element_type=jnp.float32)
+    ax = SH.current_mapped_axis()
+    if ax is None or w_head.shape[-1] == vocab_size:
+        return logits
+    return jax.lax.all_gather(logits, ax, axis=-1, tiled=True)
 
 
 def tree_size_bytes(tree) -> int:

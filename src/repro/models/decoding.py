@@ -47,7 +47,7 @@ from repro.models import mamba as M
 from repro.models import moe as MOE
 from repro.models import rwkv6 as R
 from repro.models import transformer as T
-from repro.models.common import last_valid
+from repro.models.common import last_valid, vocab_parallel_logits
 from repro import sharding as SH
 from repro.sharding import constrain
 
@@ -477,8 +477,8 @@ def paged_step(cfg, params, batch, state, pools, page_table, *,
     # each row's last VALID position (prefill chunks are padded)
     x_last = last_valid(x, length)
     w_head = T.lm_head_weight(cfg, pair)
-    logits = jnp.einsum("bd,dv->bv", x_last, w_head,
-                        preferred_element_type=jnp.float32)
+    # vocab-parallel on the serve mesh: local [B, V/n] einsum + all_gather
+    logits = vocab_parallel_logits(x_last, w_head, cfg.vocab_size)
     return logits, new_state, new_pools
 
 
@@ -487,13 +487,27 @@ def paged_step(cfg, params, batch, state, pools, page_table, *,
 #
 # Page pools shard over KV heads (logical axis "paged_pool" -> model); page
 # tables, batch rows, and per-slot recurrent/ring state stay replicated
-# ("page_table" -> None). Only the paged-attention projections run
+# ("page_table" -> None; state shards slice their block in and all_gather it
+# back out). EVERY weight matmul in the step is tensor-parallel whenever its
+# sharded dim divides the mesh: attention (paged AND ring) runs
 # head-parallel (wq/wk/wv by output head blocks, wo by input rows, one psum
-# after wo — see `layers.chunk_paged_attention`); every other layer computes
-# redundantly per shard so the replicated state stays consistent without
-# collectives. GQA head-block sharding keeps groups aligned: shard i holds
-# q heads [i*Hq/n, (i+1)*Hq/n) and kv heads [i*Hkv/n, (i+1)*Hkv/n), and
-# Hq/n = g * Hkv/n.
+# after wo), MLPs and MoE expert FFNs split d_ff column/row-parallel with
+# one psum after w_down, mamba splits d_inner (in/x/out projections
+# row-parallel), rwkv time-mix splits by head block and channel-mix by d_ff,
+# and the embedding/LM head are vocab-parallel. The tiny remainder — norms,
+# routers, decay loras — is replicated. Detection is SHAPE-BASED at every
+# site: `paged_param_specs` only shards dims divisible by the mesh size, and
+# model code compares the local leaf shape against the full dim, so an
+# indivisible group silently falls back to the replicated single-device path
+# (and the replication audit's allowlist matches by construction).
+#
+# GQA head-block sharding keeps groups aligned: shard i holds q heads
+# [i*Hq/n, (i+1)*Hq/n) and kv heads [i*Hkv/n, (i+1)*Hkv/n), Hq/n = g*Hkv/n.
+#
+# Per-user deltas ride the same step: each delta leaf stays replicated and
+# the col/row_matmul sites apply it only on the shard owning the selected
+# block (column-parallel) or slice its d_in rows before the psum
+# (row-parallel) — bit-identical to the single-device gather-add.
 # ---------------------------------------------------------------------------
 
 def validate_pool_sharding(cfg, rules) -> int:
@@ -522,68 +536,193 @@ def validate_pool_sharding(cfg, rules) -> int:
 
 def pool_pspec(rules):
     """PartitionSpec of every page-pool leaf [steps, rows, Hkv, head_dim]
-    under `rules` — the "paged_pool" logical rule on the KV-head axis."""
+    under `rules` — the "paged_pool" logical rule on the KV-head axis.
+    Returned in jax's NORMALIZED form (trailing Nones stripped, size-1 mesh
+    axes dropped): sharding equality — and therefore the jitted step's
+    dispatch cache key — compares normalized specs, so pinning pools to any
+    other spelling would make the first call key a duplicate entry."""
     from jax.sharding import PartitionSpec as P
-    return P(None, None, rules.rules.get("paged_pool"), None)
+    ax = rules.rules.get("paged_pool")
+    if ax is not None and rules.mesh is not None \
+            and rules.mesh.shape.get(ax, 1) == 1:
+        ax = None
+    return P() if ax is None else P(None, None, ax)
 
 
 def paged_param_specs(cfg, params, rules):
-    """PartitionSpec tree for serve params: attention projections of PAGED
-    layers shard over the model axis; everything else (embeddings, norms,
-    MLPs, MoE, mamba/rwkv mixers, ring-attention layers) is replicated.
-    Leaves carry a leading scan-steps axis."""
+    """PartitionSpec tree for serve params: every matmul weight shards over
+    the model axis when its sharded dim divides the mesh size (attention by
+    head block, MLP/MoE/rwkv-channel by d_ff, mamba by d_inner, rwkv
+    time-mix by head block, embed/LM head by vocab); norms, routers, and any
+    group failing its divisibility check stay replicated — model code
+    detects the fallback from the leaf shapes. Segment leaves carry a
+    leading scan-steps axis; embed/lm_head do not."""
     from jax.sharding import PartitionSpec as P
     axis = rules.model_axis
+    n = rules.mesh.shape[axis] if (rules.mesh is not None and axis) else 1
+    specs = jax.tree.map(lambda _: P(), params)
+
+    def set_group(ts, name, spec):
+        # overwrite only the named leaves; nested dicts (ln_x, shared)
+        # keep their already-replicated structure
+        if spec is None or name not in ts:
+            return
+        for k, v in spec.items():
+            if k in ts[name]:
+                ts[name][k] = v
+
+    heads_ok = cfg.num_heads % n == 0 and cfg.num_kv_heads % n == 0
     attn_spec = {"wq": P(None, None, axis), "wk": P(None, None, axis),
                  "wv": P(None, None, axis), "wo": P(None, axis, None)}
-    specs = jax.tree.map(lambda _: P(), params)
+
+    def mlp_spec(p_mlp):
+        if p_mlp["w_up"].shape[-1] % n:
+            return None
+        return {"w_gate": P(None, None, axis), "w_up": P(None, None, axis),
+                "w_down": P(None, axis, None)}
+
+    mamba_ok = M.d_inner(cfg) % n == 0 and cfg.d_model % n == 0 \
+        if cfg.ssm is not None else False
+    mamba_spec = {"in_proj": P(None, axis, None), "conv_w": P(None, None, axis),
+                  "conv_b": P(None, axis), "x_proj": P(None, axis, None),
+                  "dt_proj": P(None, None, axis), "dt_bias": P(None, axis),
+                  "A_log": P(None, axis, None), "D": P(None, axis),
+                  "out_proj": P(None, axis, None)}
+    rwkv_ok = cfg.rwkv is not None and R.num_heads(cfg) % n == 0
+    time_spec = {"wr": P(None, None, axis), "wk": P(None, None, axis),
+                 "wv": P(None, None, axis), "wg": P(None, None, axis),
+                 "wo": P(None, axis, None), "w0": P(None, axis),
+                 "wB": P(None, None, axis), "u": P(None, axis, None)}
+    chan_spec = {"wk": P(None, None, axis), "wv": P(None, axis, None)} \
+        if cfg.d_ff % n == 0 else None
+
     for seg in T.segment_layout(cfg):
-        seg_spec = specs["segments"][seg.name]
+        seg_p = params["segments"][seg.name]
+        seg_s = specs["segments"][seg.name]
         for sub, role in _paged_layout(cfg, seg.kind):
-            if role != "paged":
-                continue
-            tgt = seg_spec if sub is None else seg_spec[sub]
-            tgt["attn"] = {k: attn_spec.get(k, P())
-                           for k in tgt["attn"]}
+            tp = seg_p if sub is None else seg_p[sub]
+            ts = seg_s if sub is None else seg_s[sub]
+            if "attn" in tp and (role == "paged" or heads_ok):
+                # paged layers are validated divisible up front
+                set_group(ts, "attn", attn_spec)
+            if "mamba" in tp and mamba_ok:
+                set_group(ts, "mamba", mamba_spec)
+            if "time" in tp and rwkv_ok:
+                set_group(ts, "time", time_spec)
+            if "chan" in tp:
+                set_group(ts, "chan", chan_spec)
+            if "mlp" in tp:
+                set_group(ts, "mlp", mlp_spec(tp["mlp"]))
+            if "moe" in tp:
+                if cfg.d_ff % n == 0:
+                    set_group(ts, "moe", {
+                        "w_gate": P(None, None, None, axis),
+                        "w_up": P(None, None, None, axis),
+                        "w_down": P(None, None, axis, None)})
+                if "shared" in tp["moe"]:
+                    sh = mlp_spec(tp["moe"]["shared"])
+                    if sh is not None:
+                        set_group(ts["moe"], "shared", sh)
+    if cfg.vocab_size % n == 0:
+        if "embed" in specs:
+            specs["embed"]["tok"] = P(axis, None)
+        if "lm_head" in specs:
+            specs["lm_head"]["w"] = P(None, axis)
     return specs
+
+
+def sharded_param_shapes(cfg, params, rules):
+    """(forbidden, replicated) full per-matmul shapes for the replication
+    audit. `forbidden` holds the FULL (unsharded) shape of every
+    spec-sharded leaf — a dot_general consuming such a shape inside the
+    sharded step means the leaf arrived replicated and the per-shard FLOP
+    saving silently reverted. Segment leaves drop their leading scan-steps
+    axis (the scan body consumes per-step slices). Two collision classes
+    are subtracted into the `replicated` allowlist: full shapes that ALSO
+    belong to a policy-replicated leaf (e.g. rwkv channel-mix wr [d, d]
+    colliding with a sharded time-mix wr), and full shapes coinciding with
+    some leaf's POST-SHARD local shape (smoke configs set d_ff = 2 d, so
+    the n=2 local w_gate [d, d] is a legitimate matmul that must not match
+    a forbidden full wq [d, d])."""
+    specs = paged_param_specs(cfg, params, rules)
+    axis = rules.model_axis
+    n = rules.mesh.shape[axis] if (rules.mesh is not None and axis) else 1
+    flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: x is None)
+    forbidden, replicated = set(), set()
+    for (path, leaf), spec in zip(flat_p, flat_s):
+        keys = [getattr(k, "key", None) for k in path]
+        scan = bool(keys) and keys[0] == "segments"
+        shape = tuple(leaf.shape)
+        local = tuple(d // n if (i < len(spec) and spec[i] is not None)
+                      else d for i, d in enumerate(shape))
+        if scan:
+            shape, local = shape[1:], local[1:]
+        if len(shape) < 2:
+            continue      # vectors never feed a dot_general contraction
+        if any(a is not None for a in spec):
+            forbidden.add(shape)
+            replicated.add(local)
+        else:
+            replicated.add(shape)
+    return forbidden - replicated, replicated
 
 
 def make_sharded_paged_step(cfg, rules, params, *, page_size: int,
                             flash_decode: bool = True):
     """Build a jitted `paged_step` that runs through shard_map over
     `rules.model_axis`. Signature matches the single-device step
-    (`(params, batch, state, pools, page_table, deltas)`) except per-user
-    deltas are unsupported (must be None). `params` is only used for its
-    tree structure (in_specs are a full pytree over the param leaves)."""
+    (`(params, batch, state, pools, page_table, deltas)`), per-user deltas
+    included: delta leaves cross the shard_map replicated and each
+    col/row_matmul site applies its shard's share (see the contract comment
+    above). The deltas shard_map is built lazily, keyed by the deltas tree
+    structure — the engine passes one fixed structure (or always None), so
+    the jit trace count stays at one per batch shape, exactly as on a
+    single device. `params` is only used for its tree structure/shapes
+    (in_specs are a full pytree over the param leaves)."""
     from jax.sharding import PartitionSpec as P
     from repro.compat import shard_map
 
     mesh, axis = rules.mesh, rules.model_axis
     validate_pool_sharding(cfg, rules)
+    param_specs = paged_param_specs(cfg, params, rules)
+    io_specs = dict(out_specs=(P(), P(), pool_pspec(rules)), check_vma=False)
 
-    def body(p, batch, state, pools, pt):
+    def body(p, batch, state, pools, pt, deltas=None):
         # inside shard_map arrays are per-shard locals: GSPMD constraints
-        # (use_rules) do not apply, and paged wo partials psum over `axis`
+        # (use_rules) do not apply, and row-parallel partials psum over
+        # `axis`
         with SH.use_rules(None), SH.mapped_model_axis(axis):
             return paged_step(cfg, p, batch, state, pools, pt,
-                              page_size=page_size,
+                              page_size=page_size, deltas=deltas,
                               flash_decode=flash_decode)
 
-    mapped = shard_map(
+    base = jax.jit(shard_map(
         body, mesh=mesh,
-        in_specs=(paged_param_specs(cfg, params, rules),
-                  P(), P(), pool_pspec(rules), P()),
-        out_specs=(P(), P(), pool_pspec(rules)),
-        check_vma=False)
-    step = jax.jit(mapped)
+        in_specs=(param_specs, P(), P(), pool_pspec(rules), P()),
+        **io_specs))
+    delta_steps: dict[Any, Any] = {}
 
     def call(p, batch, state, pools, pt, deltas=None):
-        if deltas is not None:
-            raise ValueError(
-                "sharded serving does not support per-user deltas")
-        return step(p, batch, state, pools, pt)
+        if deltas is None:
+            return base(p, batch, state, pools, pt)
+        key = jax.tree.structure(deltas)
+        step = delta_steps.get(key)
+        if step is None:
+            step = jax.jit(shard_map(
+                body, mesh=mesh,
+                in_specs=(param_specs, P(), P(), pool_pspec(rules), P(),
+                          jax.tree.map(lambda _: P(), deltas)),
+                **io_specs))
+            delta_steps[key] = step
+        return step(p, batch, state, pools, pt, deltas)
 
-    call._cache_size = getattr(step, "_cache_size", lambda: -1)
+    def cache_size():
+        sizes = [getattr(s, "_cache_size", lambda: -1)()
+                 for s in [base] + list(delta_steps.values())]
+        return -1 if any(s < 0 for s in sizes) else sum(sizes)
+
+    call._cache_size = cache_size
     return call
 
 

@@ -16,8 +16,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.sparse_update import smm
-from repro.models.common import delta_matmul_add, dense_init
-from repro.sharding import constrain, psum_mapped
+from repro.models.common import col_matmul, dense_init, row_matmul
+from repro import sharding as SH
+from repro.sharding import constrain
 
 # ---------------------------------------------------------------------------
 # Norms
@@ -132,13 +133,15 @@ def _qkv(p, cfg, x, positions, sel=None, delta=None):
     hd = cfg.resolved_head_dim
     # head counts come from the projection widths, not cfg: inside a
     # shard_map over the model axis each shard holds a head-block of
-    # wq/wk/wv, so the local head count is cfg's divided by the shard count
-    q = delta_matmul_add(smm(x, p["wq"], sel, "wq"), x, delta, "wq") \
-        .reshape(b, s, -1, hd)
-    k = delta_matmul_add(smm(x, p["wk"], sel, "wk"), x, delta, "wk") \
-        .reshape(b, s, -1, hd)
-    v = delta_matmul_add(smm(x, p["wv"], sel, "wv"), x, delta, "wv") \
-        .reshape(b, s, -1, hd)
+    # wq/wk/wv (column-parallel), so the local head count is cfg's divided
+    # by the shard count; full_out lets a rider delta land on the owning
+    # shard only
+    q = col_matmul(x, p["wq"], sel, "wq", delta,
+                   full_out=cfg.num_heads * hd).reshape(b, s, -1, hd)
+    k = col_matmul(x, p["wk"], sel, "wk", delta,
+                   full_out=cfg.num_kv_heads * hd).reshape(b, s, -1, hd)
+    v = col_matmul(x, p["wv"], sel, "wv", delta,
+                   full_out=cfg.num_kv_heads * hd).reshape(b, s, -1, hd)
     if getattr(cfg, "mrope", False):
         q = apply_mrope(q, positions, cfg.rope_theta)
         k = apply_mrope(k, positions, cfg.rope_theta)
@@ -475,6 +478,19 @@ def chunk_ring_attention(p, cfg, x, start, active, cache, *, window: int,
     w_cap = cache["k"].shape[1]
     q, k, v = _qkv(p, cfg, x, _serve_positions(cfg, start, s), delta=delta)
 
+    # Under head-sharded serving the ring cache arrives replicated (it is
+    # per-slot engine state, not pool state): slice this shard's head block,
+    # attend and write locally, and gather the heads back before returning
+    # so the state leaves the shard_map replicated again.
+    ax = SH.current_mapped_axis()
+    hkv_loc = k.shape[2]
+    local_heads = ax is not None and hkv_loc != cache["k"].shape[2]
+    ring_k, ring_v = cache["k"], cache["v"]
+    if local_heads:
+        off = jax.lax.axis_index(ax) * hkv_loc
+        ring_k = jax.lax.dynamic_slice_in_dim(ring_k, off, hkv_loc, axis=2)
+        ring_v = jax.lax.dynamic_slice_in_dim(ring_v, off, hkv_loc, axis=2)
+
     j = jnp.arange(s)
     qpos = start[:, None] + j[None, :]                       # [B, S]
     # ring part: slot i holds the latest position == i (mod W) that is
@@ -488,8 +504,8 @@ def chunk_ring_attention(p, cfg, x, start, active, cache, *, window: int,
     chunk_mask = (j[None, :] <= j[:, None]) & (j[:, None] - j[None, :] < window)
     chunk_mask = jnp.broadcast_to(chunk_mask[None], (b, s, s))
 
-    k_cat = jnp.concatenate([cache["k"].astype(k.dtype), k], axis=1)
-    v_cat = jnp.concatenate([cache["v"].astype(v.dtype), v], axis=1)
+    k_cat = jnp.concatenate([ring_k.astype(k.dtype), k], axis=1)
+    v_cat = jnp.concatenate([ring_v.astype(v.dtype), v], axis=1)
     mask = jnp.concatenate([ring_mask, chunk_mask], axis=2)
     out = _grouped_scores(q, k_cat, v_cat, mask, cfg)
 
@@ -501,11 +517,15 @@ def chunk_ring_attention(p, cfg, x, start, active, cache, *, window: int,
         (j[None, :] >= length[:, None] - w_cap) & active[:, None]
     slot = jnp.where(keep, jnp.mod(qpos, w_cap), w_cap)      # [B, S]
     rows = jnp.broadcast_to(jnp.arange(b)[:, None], (b, s))
-    k_cache = cache["k"].at[rows, slot].set(
-        k.astype(cache["k"].dtype), mode="drop")
-    v_cache = cache["v"].at[rows, slot].set(
-        v.astype(cache["v"].dtype), mode="drop")
-    y = delta_matmul_add(smm(out, p["wo"], None, "wo"), out, delta, "wo")
+    k_cache = ring_k.at[rows, slot].set(
+        k.astype(ring_k.dtype), mode="drop")
+    v_cache = ring_v.at[rows, slot].set(
+        v.astype(ring_v.dtype), mode="drop")
+    if local_heads:
+        k_cache = SH.all_gather_mapped(k_cache, axis=2)
+        v_cache = SH.all_gather_mapped(v_cache, axis=2)
+    y = row_matmul(out, p["wo"], None, "wo", delta,
+                   full_in=cfg.num_heads * cfg.resolved_head_dim)
     return y, {"k": k_cache, "v": v_cache}
 
 
@@ -563,11 +583,13 @@ def chunk_paged_attention(p, cfg, x, start, active, pool, page_table, *,
         k.reshape(b * s, *k.shape[2:]).astype(pool["k"].dtype), mode="drop")
     v_pool = pool["v"].at[dest].set(
         v.reshape(b * s, *v.shape[2:]).astype(pool["v"].dtype), mode="drop")
-    y = delta_matmul_add(smm(out, p["wo"], None, "wo"), out, delta, "wo")
     # under head-sharded serving each shard's wo rows cover only its local
-    # heads, so y is a partial sum — reduce over the mapped model axis
-    # (identity outside shard_map)
-    return psum_mapped(y), {"k": k_pool, "v": v_pool}
+    # heads: row-parallel matmul, one psum reassembles the output (identity
+    # outside shard_map); a rider delta is applied on the local d_in slice
+    # before the reduction
+    y = row_matmul(out, p["wo"], None, "wo", delta,
+                   full_in=cfg.num_heads * cfg.resolved_head_dim)
+    return y, {"k": k_pool, "v": v_pool}
 
 
 def init_kv_cache(cfg, batch: int, seq_len: int, *, window: int = 0, dtype=None):
@@ -613,22 +635,26 @@ def init_mlp(key, cfg, dtype, d_ff: Optional[int] = None):
     raise ValueError(kind)
 
 
-def apply_mlp(p, cfg, x, sel=None, delta=None):
+def apply_mlp(p, cfg, x, sel=None, delta=None, d_ff: Optional[int] = None):
+    """gate/up are column-parallel (ff sharded on the model axis at serve
+    time), down is row-parallel (one psum). `d_ff` is the FULL hidden width
+    when it differs from cfg.d_ff (dense-first MoE segment, shared-expert
+    MLP) — the col/row primitives compare it against the local weight shape
+    to tell sharded from replicated-fallback leaves."""
+    ff = d_ff or cfg.d_ff
     kind = cfg.mlp_kind
     if kind == "swiglu":
         h = jax.nn.silu(
-            delta_matmul_add(smm(x, p["w_gate"], sel, "w_gate"), x, delta,
-                             "w_gate")) * \
-            delta_matmul_add(smm(x, p["w_up"], sel, "w_up"), x, delta, "w_up")
+            col_matmul(x, p["w_gate"], sel, "w_gate", delta, full_out=ff)) * \
+            col_matmul(x, p["w_up"], sel, "w_up", delta, full_out=ff)
     elif kind == "gelu":
         h = jax.nn.gelu(
-            delta_matmul_add(smm(x, p["w_up"], sel, "w_up"), x, delta, "w_up"))
+            col_matmul(x, p["w_up"], sel, "w_up", delta, full_out=ff))
     elif kind == "sq_relu":
-        h = delta_matmul_add(smm(x, p["w_up"], sel, "w_up"), x, delta, "w_up")
+        h = col_matmul(x, p["w_up"], sel, "w_up", delta, full_out=ff)
         h = jax.nn.relu(h)
         h = h * h
     else:
         raise ValueError(kind)
     h = constrain(h, "batch", "seq", "ff")
-    return delta_matmul_add(smm(h, p["w_down"], sel, "w_down"), h, delta,
-                            "w_down")
+    return row_matmul(h, p["w_down"], sel, "w_down", delta, full_in=ff)

@@ -6,9 +6,17 @@ inside a rematerialized (jax.checkpoint) chunk scan whose carry is the
 [B, d_inner, d_state] state — so training memory is O(S·d_inner +
 chunk·d_inner·d_state), the SSM analogue of flash attention.
 
-TP: d_inner is sharded over the model axis (in_proj column-, out_proj
-row-parallel); the recurrence is elementwise in d_inner so it needs no
-collectives.
+TP: d_inner is sharded over the model axis; the recurrence is elementwise
+in d_inner so it needs no collectives. At serve time (inside the paged
+shard_map) in_proj and x_proj are ROW-parallel — `in_proj` packs the x/z
+halves on one output axis, so column-sharding it would split each
+contiguous weight slice across the halves; sharding the INPUT dim keeps
+both full-width halves addressable and one psum reassembles them, after
+which each shard slices its own d_inner channel block. conv, the ssm scan,
+dt_proj and the gate then run entirely on the local channel shard, and
+out_proj is row-parallel back into d_model. The recurrent cache enters the
+shard_map replicated; shards slice their channels in and all_gather them
+back out.
 """
 from __future__ import annotations
 
@@ -20,6 +28,7 @@ import jax.numpy as jnp
 
 from repro.core.sparse_update import smm
 from repro.models.common import dense_init
+from repro import sharding as SH
 from repro.sharding import constrain
 
 CHUNK = 64
@@ -118,8 +127,31 @@ def apply_mamba(p, cfg, x, sel=None, cache=None, length=None):
     ns = cfg.ssm.d_state
     dr = dt_rank(cfg)
 
-    xz = smm(x, p["in_proj"], sel, "in_proj")
+    # serve-mesh detection: out_proj arrives with its d_inner rows sharded
+    ax = SH.current_mapped_axis()
+    di_loc = p["out_proj"].shape[-2]
+    local = ax is not None and di_loc != di
+    if local:
+        shard = jax.lax.axis_index(ax)
+        d_loc = p["in_proj"].shape[-2]
+        # in_proj row-parallel: contract the local d_model rows, psum the
+        # full-width [B, S, 2*di] so the x/z halves stay addressable
+        x_rows = jax.lax.dynamic_slice_in_dim(x, shard * d_loc, d_loc, axis=-1)
+        xz = jax.lax.psum(smm(x_rows, p["in_proj"], sel, "in_proj"), ax)
+    else:
+        xz = smm(x, p["in_proj"], sel, "in_proj")
     x_in, z = jnp.split(xz, 2, axis=-1)
+    if local:
+        # everything below runs on this shard's d_inner channel block
+        x_in = jax.lax.dynamic_slice_in_dim(x_in, shard * di_loc, di_loc, -1)
+        z = jax.lax.dynamic_slice_in_dim(z, shard * di_loc, di_loc, -1)
+        if cache is not None:
+            cache = {
+                "h": jax.lax.dynamic_slice_in_dim(
+                    cache["h"], shard * di_loc, di_loc, axis=1),
+                "conv": jax.lax.dynamic_slice_in_dim(
+                    cache["conv"], shard * di_loc, di_loc, axis=-1),
+            }
     x_in = constrain(x_in, "batch", "seq", "d_inner")
 
     if cache is None:
@@ -147,7 +179,11 @@ def apply_mamba(p, cfg, x, sel=None, cache=None, length=None):
             tail = length[:, None] + jnp.arange(n_hist)[None, :]   # [B, K-1]
             new_conv = jnp.take_along_axis(hist, tail[:, :, None], axis=1)
 
+    # x_proj row-parallel under the mesh: local channels in, small full
+    # [dt_rank + 2*d_state] out, one psum
     dbl = smm(x_c, p["x_proj"], sel, "x_proj")
+    if local:
+        dbl = jax.lax.psum(dbl, ax)
     dt, b_ssm, c_ssm = jnp.split(dbl, [dr, dr + ns], axis=-1)
     dt = jax.nn.softplus(dt.astype(jnp.float32) @ p["dt_proj"].astype(jnp.float32)
                          + p["dt_bias"])                      # [B,S,D] fp32
@@ -161,7 +197,8 @@ def apply_mamba(p, cfg, x, sel=None, cache=None, length=None):
     b32 = b_ssm.astype(jnp.float32)
     c32 = c_ssm.astype(jnp.float32)
 
-    h0 = cache["h"] if cache is not None else jnp.zeros((b, di, ns), jnp.float32)
+    h0 = cache["h"] if cache is not None \
+        else jnp.zeros((b, x_in.shape[-1], ns), jnp.float32)
     if cache is not None and s == 1:
         dA, dBx = _discretize(a, dt[:, 0], xc32[:, 0], b32[:, 0])
         h_last = dA * h0 + dBx
@@ -171,7 +208,15 @@ def apply_mamba(p, cfg, x, sel=None, cache=None, length=None):
 
     y = y + p["D"] * x_c.astype(jnp.float32)
     y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    # out_proj row-parallel: local channels contract, psum back into d_model
     out = smm(y, p["out_proj"], sel, "out_proj")
+    if local:
+        out = jax.lax.psum(out, ax)
+        if cache is not None:
+            # state must leave the shard_map replicated: gather the channel
+            # blocks back (exact — per-channel values are concatenated)
+            h_last = SH.all_gather_mapped(h_last, axis=1)
+            new_conv = SH.all_gather_mapped(new_conv, axis=-1)
     new_cache = None if cache is None else {"h": h_last, "conv": new_conv}
     return out, new_cache
 

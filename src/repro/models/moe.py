@@ -10,6 +10,14 @@ all-to-all / all-gather traffic.
 
 Outside a mesh (CPU unit tests) the same code runs with E_local = E and the
 psum skipped.
+
+Serve-time tensor parallelism (inside the paged-decode shard_map) shards a
+DIFFERENT axis: every expert is resident on every shard, but the expert
+FFN hidden dim d_ff is split column-/row-parallel (like `apply_mlp`) — the
+router and the sort-based dispatch run replicated, each shard computes its
+d_ff slice of every routed token, and one psum over the model axis
+reassembles the combined output. Decode batches are tiny, so sharding the
+per-token FLOPs beats sharding the expert set.
 """
 from __future__ import annotations
 
@@ -22,7 +30,7 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import shard_map
 from repro.core.sparse_update import smm
 from repro.models.common import dense_init
-from repro.sharding import current_rules
+from repro.sharding import current_mapped_axis, current_rules, psum_mapped
 from repro.models import layers as L
 
 
@@ -148,10 +156,18 @@ def apply_moe(p, cfg, x, sel=None):
         y_flat = _dispatch_combine(cfg, x_flat, ids, weights,
                                    {kk: p[kk] for kk in ("w_gate", "w_up", "w_down")},
                                    sel, None, e, capacity)
+        # serve mesh (inside the paged-decode shard_map): router + dispatch
+        # replicated, every expert resident, but the expert hidden dim
+        # arrived d_ff-sharded — each shard's combine holds the partial
+        # w_down contraction of its d_ff slice, one psum reassembles it
+        if current_mapped_axis() is not None and \
+                p["w_gate"].shape[-1] != cfg.d_ff:
+            y_flat = psum_mapped(y_flat)
 
     y = y_flat.reshape(b, s, d)
     if "shared" in p:
-        y = y + L.apply_mlp(p["shared"], cfg, x, sel=_shared_sel(sel))
+        y = y + L.apply_mlp(p["shared"], cfg, x, sel=_shared_sel(sel),
+                            d_ff=moe.num_shared_experts * cfg.d_ff)
     return y, aux
 
 

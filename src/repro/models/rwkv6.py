@@ -24,8 +24,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.sparse_update import smm
-from repro.models.common import dense_init, last_valid
+from repro.models.common import dense_init, last_valid, row_matmul
 from repro.models.layers import apply_norm, init_norm
+from repro import sharding as SH
 
 CHUNK = 32
 DECAY_LORA = 64
@@ -105,35 +106,67 @@ def apply_time_mix(p, cfg, x, sel=None, cache=None, length=None):
     valid prefix."""
     b, s, d = x.shape
     hd = cfg.rwkv.head_dim
-    h = num_heads(cfg)
+
+    # Serve-mesh detection: the time-mix mats arrive head-block sharded only
+    # when H % shards == 0 (a partial head cannot straddle shards — the wkv
+    # scan is head-local); otherwise they stay replicated and this whole
+    # path is the single-device one.
+    ax = SH.current_mapped_axis()
+    d_loc = p["wr"].shape[-1]
+    local = ax is not None and d_loc != d
+    shard = jax.lax.axis_index(ax) if local else None
 
     last = cache["last"] if cache is not None else None
     xp = _shift(x, last)
     mu = p["mu"].astype(x.dtype)
     xr, xk, xv, xg, xw = [x + (xp - x) * mu[i] for i in range(5)]
 
-    r = smm(xr, p["wr"], sel, "wr").reshape(b, s, h, hd)
-    k = smm(xk, p["wk"], sel, "wk").reshape(b, s, h, hd)
-    v = smm(xv, p["wv"], sel, "wv").reshape(b, s, h, hd)
+    # column-parallel projections: local head block [B, S, d/n]
+    r = smm(xr, p["wr"], sel, "wr").reshape(b, s, -1, hd)
+    k = smm(xk, p["wk"], sel, "wk").reshape(b, s, -1, hd)
+    v = smm(xv, p["wv"], sel, "wv").reshape(b, s, -1, hd)
     g = smm(xg, p["wg"], sel, "wg")
 
+    # decay lora: wA replicated (tiny), w0/wB sharded with the head block
     wlog = p["w0"] + jnp.tanh(xw.astype(jnp.float32) @ p["wA"]) @ p["wB"]
-    w = jnp.exp(-jnp.exp(wlog)).reshape(b, s, h, hd)          # decay in (0,1)
+    w = jnp.exp(-jnp.exp(wlog)).reshape(b, s, -1, hd)         # decay in (0,1)
 
     r32, k32, v32 = (t.astype(jnp.float32) for t in (r, k, v))
     if length is not None and s > 1:
         valid = (jnp.arange(s)[None, :] < length[:, None])[:, :, None, None]
         k32 = jnp.where(valid, k32, 0.0)      # kv outer product vanishes
         w = jnp.where(valid, w, 1.0)          # identity decay: S frozen
-    s0 = cache["s"] if cache is not None else jnp.zeros((b, h, hd, hd), jnp.float32)
+    h_eff = r.shape[2]
+    if cache is None:
+        s0 = jnp.zeros((b, h_eff, hd, hd), jnp.float32)
+    elif local:
+        # the wkv state enters the shard_map replicated: run the scan on
+        # this shard's head block only
+        s0 = jax.lax.dynamic_slice_in_dim(cache["s"], shard * h_eff, h_eff,
+                                          axis=1)
+    else:
+        s0 = cache["s"]
     if s == 1:  # decode fast path
         s_new, y = _wkv_chunk(p["u"], s0, (r32, k32, v32, w))
     else:
         y, s_new = wkv(r32, k32, v32, w, p["u"], s0)
 
+    if local:
+        # ln_x normalizes over the FULL d: gather the head blocks (exact —
+        # per-head values are concatenated in shard order)
+        y = SH.all_gather_mapped(y, axis=2)
+        if cache is not None:
+            s_new = SH.all_gather_mapped(s_new, axis=1)
     y = apply_norm(p["ln_x"], y.reshape(b, s, d).astype(x.dtype))
-    y = y * jax.nn.silu(g)
-    out = smm(y, p["wo"], sel, "wo")
+    if local:
+        # gate with the local g slice and feed wo row-parallel: one psum
+        # reassembles the output
+        y_loc = jax.lax.dynamic_slice_in_dim(y, shard * d_loc, d_loc, -1)
+        out = jax.lax.psum(smm(y_loc * jax.nn.silu(g), p["wo"], sel, "wo"),
+                           ax)
+    else:
+        y = y * jax.nn.silu(g)
+        out = smm(y, p["wo"], sel, "wo")
     new_cache = None if cache is None else {"s": s_new,
                                             "last": last_valid(x, length)}
     return out, new_cache
@@ -157,9 +190,11 @@ def apply_channel_mix(p, cfg, x, sel=None, cache=None, length=None):
     mu = p["mu"].astype(x.dtype)
     xk = x + (xp - x) * mu[0]
     xr = x + (xp - x) * mu[1]
+    # channel-mix is mlp-shaped: wk column-parallel on ff, wv row-parallel
+    # (one psum); wr is [d, d] and stays replicated (specs.py _RWKV_CHAN)
     k = jax.nn.relu(smm(xk, p["wk"], sel, "wk"))
     k = k * k
-    kv = smm(k, p["wv"], sel, "wv")
+    kv = row_matmul(k, p["wv"], sel, "wv", full_in=cfg.d_ff)
     out = jax.nn.sigmoid(smm(xr, p["wr"], sel, "wr")) * kv
     new_cache = None if cache is None else {"last": last_valid(x, length)}
     return out, new_cache

@@ -29,7 +29,8 @@ from repro.models import layers as L
 from repro.models import mamba as M
 from repro.models import moe as MOE
 from repro.models import rwkv6 as R
-from repro.models.common import dense_init, embed_init
+from repro.models.common import (dense_init, embed_init,
+                                 vocab_parallel_gather)
 from repro.sharding import constrain
 
 CE_CHUNK = 1024
@@ -345,7 +346,9 @@ def embed_tokens(cfg, params_pair, batch):
         x = batch["embeds"]
     else:
         emb = _pick(frozen, trainable, "embed", "tok")
-        x = jnp.take(emb, batch["tokens"], axis=0)
+        # vocab-parallel on the serve mesh (local gather + psum); plain
+        # jnp.take otherwise
+        x = vocab_parallel_gather(emb, batch["tokens"], cfg.vocab_size)
     if cfg.family == "ssm":
         x = L.apply_norm(_pick(frozen, trainable, "ln0"), x)
     return x

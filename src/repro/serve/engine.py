@@ -158,6 +158,14 @@ class ServeStats:
     # sharded serving (defaults = single-device engine)
     mesh_shards: int = 1            # model-axis shards the pools split into
     pool_shard_bytes: int = 0       # page-pool bytes resident per shard
+    # phase-split throughput: wall time spent inside the jitted step (host
+    # sync included) and tokens processed, split prefill vs decode — the
+    # mesh sweep reports these per mesh row since the two phases scale
+    # differently with tensor parallelism
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    prefill_tokens: int = 0         # VALID prompt tokens prefilled (pad excl.)
+    decode_tokens: int = 0          # tokens sampled for runnable slots
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -178,6 +186,14 @@ class ServeStats:
     @property
     def delta_hit_rate(self) -> float:
         return self.delta_hits / max(1, self.delta_lookups)
+
+    @property
+    def prefill_tok_per_s(self) -> float:
+        return self.prefill_tokens / max(self.prefill_s, 1e-9)
+
+    @property
+    def decode_tok_per_s(self) -> float:
+        return self.decode_tokens / max(self.decode_s, 1e-9)
 
     @property
     def train_wave_ms_per_token(self) -> float:
@@ -298,14 +314,16 @@ class ServeEngine:
                     "sharded serving needs AxisRules built from a mesh with "
                     f"a model axis (got mesh={rules.mesh!r}, "
                     f"model_axis={rules.model_axis!r})")
-            if personalization is not None:
-                raise ValueError(
-                    "sharded serving does not support per-user deltas")
             self.mesh_shards = D.validate_pool_sharding(cfg, rules)
         self.flash_decode = flash_decode if flash_decode is not None \
             else rules is not None
 
         ps = page_size
+        # personalization trains its waves on the ORIGINAL replicated params
+        # (on a mesh, self.params becomes a sharded copy below): waves must
+        # be bit-identical to a single-device engine's, or the deltas — and
+        # therefore the served tokens — would diverge across mesh sizes
+        self._host_params = params
         if rules is not None:
             from repro.sharding import spec_tree_to_shardings
             self.params = params = jax.device_put(
@@ -320,14 +338,27 @@ class ServeEngine:
                 lambda p, batch, state, pools, pt, deltas: D.paged_step(
                     cfg, p, batch, state, pools, pt, page_size=ps,
                     deltas=deltas, flash_decode=fd))
-        self._extract = jax.jit(D.cache_extract_row)
-        self._insert = jax.jit(D.cache_insert_row)
-        self._reset = jax.jit(D.cache_reset_row)
+        # on a mesh, pin every pool/state-producing helper to the canonical
+        # layout (pools sharded over KV heads, state replicated): otherwise
+        # a COW split or row insert hands the next step a differently-laid-
+        # out input, costing a duplicate jit cache entry per batch shape and
+        # letting pools silently degrade to a replicated (full-size) layout
+        pool_out = state_out = None
+        if rules is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            pool_out = NamedSharding(rules.mesh, D.pool_pspec(rules))
+            state_out = NamedSharding(rules.mesh, PartitionSpec())
+        self._state_shard = state_out
+        self._extract = jax.jit(D.cache_extract_row, out_shardings=state_out)
+        self._insert = jax.jit(D.cache_insert_row, out_shardings=state_out)
+        self._reset = jax.jit(D.cache_reset_row, out_shardings=state_out)
         self._copy = jax.jit(
-            lambda pools, src, dst: D.copy_pool_rows(pools, src, dst, ps))
+            lambda pools, src, dst: D.copy_pool_rows(pools, src, dst, ps),
+            out_shardings=pool_out)
         self._read_rows = jax.jit(
             lambda pools, src: D.read_pool_rows(pools, src, ps))
-        self._write_rows = jax.jit(D.write_pool_rows)
+        self._write_rows = jax.jit(D.write_pool_rows,
+                                   out_shardings=pool_out)
         self._sample = jax.jit(
             lambda logits, key: sample_token(logits, key, self.temperature))
 
@@ -353,7 +384,7 @@ class ServeEngine:
             "personalization trains on token streams; embed-input frontends "
             "have none")
         plan = build_plan(self.cfg, p.sparse, 0)
-        frozen, trainable = split_params(self.params, plan)
+        frozen, trainable = split_params(self._host_params, plan)
         spec = decode_delta_spec(plan, trainable["segments"])
         if not spec:
             raise ValueError(
@@ -707,6 +738,8 @@ class ServeEngine:
         self._retry_events = 0
         self._stream_errors = 0
         self._watchdog_kills = 0
+        self._prefill_s = self._decode_s = 0.0
+        self._prefill_tokens = self._decode_tokens = 0
         journal_replays = 0
         shed_rids: set[int] = set()
         mon = StragglerMonitor(factor=self._straggler_factor)
@@ -716,11 +749,16 @@ class ServeEngine:
             max(1, self.num_pages), self.page_size)
         if self.rules is not None:
             # pools shard over KV heads along the model axis; state and the
-            # page table stay replicated (host-side np array, see below)
+            # page table stay replicated (page table is a host-side np
+            # array, see below). device_put onto the CANONICAL layouts so
+            # the very first step call keys the same jit cache entry as
+            # steady state.
             from jax.sharding import NamedSharding
             shard = NamedSharding(self.rules.mesh, D.pool_pspec(self.rules))
             self._pools = jax.tree.map(
                 lambda a: jax.device_put(a, shard), self._pools)
+            state = jax.tree.map(
+                lambda a: jax.device_put(a, self._state_shard), state)
         self._pool_bytes = sum(a.size * a.dtype.itemsize
                                for a in jax.tree.leaves(self._pools))
         self._pt = np.full((self.num_slots, self.max_pages), -1, np.int32)
@@ -739,6 +777,10 @@ class ServeEngine:
             self._cache = None
         if self._p13n is not None:
             self._dbatch = self._delta_batch_zeros()
+            if self.rules is not None:
+                self._dbatch = jax.tree.map(
+                    lambda a: jax.device_put(a, self._state_shard),
+                    self._dbatch)
             self._duser = [None] * self.num_slots
             self._wave_s, self._wave_count = 0.0, 0
             self._wave_losses = []
@@ -919,9 +961,13 @@ class ServeEngine:
                     pt_row = jnp.asarray(self._pt[slot.index:slot.index + 1])
                     d_row = None if self._dbatch is None else \
                         self._extract(self._dbatch, slot.index)
+                    ts = time.perf_counter()
                     logits, st_row, self._pools = self._step(
                         self.params, self._chunk_batch(req, slot.pos, size),
                         st_row, self._pools, pt_row, d_row)
+                    jax.block_until_ready(logits)
+                    self._prefill_s += time.perf_counter() - ts
+                    self._prefill_tokens += size
                     state = self._insert(state, st_row, slot.index)
                     slot.pos += size
                     prefill_chunks += 1
@@ -1010,10 +1056,14 @@ class ServeEngine:
             pos_row = [min(s.pos, self.max_len - 1) for s in sched.slots]
             active_row = [s.state is SlotState.ACTIVE and s.index in run_idx
                           for s in sched.slots]
+            ts = time.perf_counter()
             logits, state, self._pools = self._step(
                 self.params,
                 self._decode_batch(tokens_row, pos_row, active_row),
                 state, self._pools, jnp.asarray(self._pt), self._dbatch)
+            jax.block_until_ready(logits)
+            self._decode_s += time.perf_counter() - ts
+            self._decode_tokens += len(runnable)
             it_work = True
             toks = np.asarray(self._sample(logits, self._sample_key()))
             for slot in runnable:         # inactive rows: sampled, discarded
@@ -1085,6 +1135,10 @@ class ServeEngine:
             stragglers=len(mon.flagged),
             mesh_shards=self.mesh_shards,
             pool_shard_bytes=self._pool_bytes // max(1, self.mesh_shards),
+            prefill_s=self._prefill_s,
+            decode_s=self._decode_s,
+            prefill_tokens=self._prefill_tokens,
+            decode_tokens=self._decode_tokens,
         )
 
 

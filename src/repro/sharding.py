@@ -14,20 +14,36 @@ from typing import Optional, Sequence
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-# Logical axis vocabulary used across the model zoo:
-#   batch      - global batch                  -> ("pod", "data")
+# Logical axis vocabulary used across the model zoo, and where each axis
+# lands on the mesh. Training resolves these through `constrain` (GSPMD);
+# serving slices params explicitly (`paged_param_specs` + shard_map), where
+# the same names map onto the "model" axis as column-/row-parallel weights:
+#
+#   batch      - global batch                  -> ("pod", "data"); serve: replicated
 #   seq        - sequence (activations)        -> None (or "data" for long decode cache)
 #   cache_seq  - kv-cache sequence             -> None / "data" for long_500k
-#   model_d    - d_model embed dim             -> None (replicated)
-#   heads      - attention query heads         -> "model"
-#   kv_heads   - attention kv heads            -> "model"
-#   ff         - FFN hidden                    -> "model"
-#   vocab      - vocabulary                    -> "model"
-#   expert     - MoE expert                    -> "model"
+#   model_d    - d_model embed dim             -> None (activations replicated;
+#                row-parallel matmuls psum back into it)
+#   heads      - attention query heads         -> "model" (serve: col-parallel wq)
+#   kv_heads   - attention kv heads            -> "model" (serve: col wk/wv, row wo)
+#   ff         - FFN hidden                    -> "model" (serve: col gate/up, row down;
+#                also MoE expert FFNs and the rwkv channel-mix)
+#   vocab      - vocabulary                    -> "model" (serve: vocab-parallel embed
+#                gather + local-vocab LM-head logits)
+#   expert     - MoE expert                    -> "model" (train: expert-parallel
+#                dispatch; serve: experts all resident, their d_ff sharded instead)
 #   layers     - stacked-layer leading axis    -> None
-#   d_inner    - mamba/rwkv inner channels     -> "model"
+#   d_inner    - mamba/rwkv inner channels     -> "model" (serve: conv + ssm scan and
+#                the rwkv wkv state run on the local channel/head shard)
 #   paged_pool - serve page-pool KV-head axis  -> "model"
 #   page_table - per-slot page tables          -> None (replicated host state)
+#
+# Serve-time fallback: a dim that does not divide the model-axis size stays
+# replicated for that leaf group only — e.g. rwkv6 time-mix [d, d] mats need
+# H % shards == 0 because the wkv scan is head-local, so a partial head
+# cannot straddle shards. `col_matmul`/`row_matmul` detect a replicated
+# weight by its local shape and skip their collective, so the replication
+# audit's allowlist and the executed math agree by construction.
 
 _STATE = threading.local()
 
@@ -162,6 +178,15 @@ def psum_mapped(x):
     outside a shard_map (where GSPMD inserts its own collectives)."""
     ax = current_mapped_axis()
     return x if ax is None else jax.lax.psum(x, ax)
+
+
+def all_gather_mapped(x, axis: int):
+    """Concatenate per-shard slices along `axis` over the mapped model axis
+    (tiled all_gather, shard order); identity outside a shard_map. Used to
+    reassemble replicated cache state (rwkv wkv heads, mamba channels, ring
+    KV heads) before it leaves the shard_map body."""
+    ax = current_mapped_axis()
+    return x if ax is None else jax.lax.all_gather(x, ax, axis=axis, tiled=True)
 
 
 def spec_tree_to_shardings(mesh: Mesh, spec_tree):

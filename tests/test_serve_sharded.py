@@ -1,14 +1,19 @@
-"""Sharded paged serving: `paged_step` through shard_map over the model axis.
+"""Sharded paged serving: `paged_step` through shard_map over the model axis,
+with every layer tensor-parallel (col/row-parallel linears, vocab-parallel
+embed + logits) and per-user deltas riding the sharded step.
 
 Fast tier-1 tests pin the flash-decoding split softmax to the monolithic
 softmax (1e-6), single-device engine parity with flash_decode forced on,
-the full shard_map plumbing on a one-shard mesh, and the rejection paths
-(indivisible KV heads, rules without a mesh, personalization). The slow
+the full shard_map plumbing on a one-shard mesh (personalized requests
+included), and the rejection paths (indivisible KV heads, rules without a
+mesh). The replication audit (multi-device lane) proves the sharded step
+performs ZERO full-size matmuls on policy-sharded leaves. The slow
 subprocess test forces 8 host CPU devices and proves 2-/4-way sharded
 decode token-identical to the single-device engine — and, for llama3, to
-the contiguous batch=1 oracle — for all four cache families, including
-chunked prefill crossing page boundaries and a radix prefix hit whose
-rehydration lands on the sharded pool.
+the contiguous batch=1 oracle — for all four cache families plus a
+deepseek-style MoE, including chunked prefill crossing page boundaries, a
+radix prefix hit whose rehydration lands on the sharded pool, and a
+personalized (delta) request mix with online train waves.
 """
 import dataclasses
 import os
@@ -137,19 +142,88 @@ def test_pool_sharding_rejects_indivisible_kv_heads():
                                     _fake_rules(3)) == 3
 
 
-def test_engine_rejects_rules_without_mesh_or_with_personalization():
+def test_engine_rejects_rules_without_mesh():
     cfg = get_smoke_config("llama3-8b")
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     bad = SH.AxisRules({"heads": "model"}, mesh=None, model_axis="model")
     with pytest.raises(ValueError, match="mesh"):
         ServeEngine(cfg, params, num_slots=1, max_len=8, page_size=PAGE,
                     rules=bad)
+
+
+def _p13n():
+    from repro.configs import OptimizerConfig, SparseUpdateConfig
     from repro.serve import PersonalizationConfig
-    p13n = PersonalizationConfig()
-    with pytest.raises(ValueError, match="deltas"):
-        ServeEngine(cfg, params, num_slots=1, max_len=8, page_size=PAGE,
-                    rules=default_rules(make_serve_mesh(1)),
-                    personalization=p13n)
+    return PersonalizationConfig(
+        sparse=SparseUpdateConfig(update_ratio=0.5, num_update_layers=2,
+                                  channel_block=8),
+        optimizer=OptimizerConfig(kind="sgd", learning_rate=0.05),
+        train_tokens=8)
+
+
+def test_sharded_engine_personalized_one_shard_parity():
+    """The mesh x personalization exclusion is lifted: a sharded engine
+    serves a mixed plain/personalized workload token-identical to the
+    single-device personalized engine, with the same 2 jitted-step traces
+    (prefill shape + decode shape — deltas ride one fixed structure)."""
+    cfg = get_smoke_config("llama3-8b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+
+    def reqs():
+        rs = make_shared_prefix_requests(cfg, 4, 8, 11, 4, seed=3)
+        for r in rs[::2]:
+            r.user = 7      # same user twice: a train wave lands mid-run
+        return rs
+
+    ref = ServeEngine(cfg, params, num_slots=2, max_len=16, page_size=PAGE,
+                      personalization=_p13n())
+    sh = ServeEngine(cfg, params, num_slots=2, max_len=16, page_size=PAGE,
+                     rules=default_rules(make_serve_mesh(1)),
+                     personalization=_p13n())
+    s_ref, s_sh = ref.run(reqs()), sh.run(reqs())
+    assert _tokens(s_ref) == _tokens(s_sh)
+    assert s_ref.train_waves == s_sh.train_waves > 0
+    assert sh._step._cache_size() == 2
+    assert ref._step._cache_size() == 2
+
+
+# ---------------------------------------------------------------------------
+# replication audit: zero full-size matmuls on policy-sharded leaves
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs a >= 2-device mesh (multi-device CI lane)")
+def test_replication_audit_sharded_step():
+    """Every matmul the sharding policy covers (MLP, embed/LM head,
+    attention) must consume its LOCAL shard inside the sharded step — the
+    single-device step over the same shapes trips the audit, proving the
+    detector sees full-size matmuls when they exist."""
+    from repro.launch.hlo_analysis import replicated_matmul_leaves
+    # d_ff = 96 (not the smoke default 2 * d_model): keeps MLP full shapes
+    # from colliding with attention locals, so the forbidden set stays rich
+    cfg = dataclasses.replace(get_smoke_config("llama3-8b"), d_ff=96)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rules = default_rules(make_serve_mesh(2))
+    step = D.make_sharded_paged_step(cfg, rules, params, page_size=PAGE)
+    state, pools = D.init_serve_cache(cfg, 2, 16, 8, PAGE)
+    pt = jnp.zeros((2, 4), jnp.int32)
+    batch = {"tokens": jnp.zeros((2, 1), jnp.int32),
+             "start": jnp.zeros((2,), jnp.int32),
+             "active": jnp.ones((2,), bool),
+             "length": jnp.ones((2,), jnp.int32)}
+    forbidden, allowed = D.sharded_param_shapes(cfg, params, rules)
+    # the policy must actually shard the MLP (d_ff divides the mesh here)
+    assert (cfg.d_model, cfg.d_ff) in forbidden
+    args = (params, batch, state, pools, pt)
+    hits = replicated_matmul_leaves(lambda *a: step(*a), args, forbidden)
+    assert hits == [], f"full-size matmuls on sharded leaves: {hits}"
+    # sensitivity: the replicated (single-device) step over the same full
+    # params shows the forbidden shapes the audit exists to catch
+    ref_hits = replicated_matmul_leaves(
+        lambda p, b, st, pl, t: D.paged_step(cfg, p, b, st, pl, t,
+                                             page_size=PAGE),
+        args, forbidden)
+    assert ref_hits, "audit failed to flag a fully-replicated step"
 
 
 # ---------------------------------------------------------------------------
@@ -208,7 +282,8 @@ def oracle(cfg, params, prompt, gen):
 
 assert jax.device_count() >= 8, jax.device_count()
 all_ok = True
-for arch in ("llama3-8b", "gemma3-4b", "rwkv6-3b", "jamba-1.5-large-398b"):
+for arch in ("llama3-8b", "gemma3-4b", "rwkv6-3b", "jamba-1.5-large-398b",
+             "deepseek-moe-16b"):
     cfg = get_smoke_config(arch)
     if cfg.num_heads:
         # smoke configs keep Hkv=2; a 4-way mesh needs Hkv % 4 == 0
@@ -251,6 +326,46 @@ for arch in ("llama3-8b", "gemma3-4b", "rwkv6-3b", "jamba-1.5-large-398b"):
         print("RESULT", arch, n, int(ok_par), int(ok_acct), int(ok_rehy),
               int(ok_pool), int(ok_shard), int(ok_trace), int(ok_cow),
               int(ok_snap), int(ok_oracle), flush=True)
+
+# --- personalized (delta) request mix on the sharded step -------------------
+# decode_delta_spec targets attention/MLP projections, so the mix runs on
+# llama3; waves train on the replicated host params, making the resulting
+# deltas — and therefore the served tokens — mesh-width independent.
+from repro.configs import OptimizerConfig, SparseUpdateConfig
+from repro.serve import PersonalizationConfig
+
+def p13n():
+    return PersonalizationConfig(
+        sparse=SparseUpdateConfig(update_ratio=0.5, num_update_layers=2,
+                                  channel_block=8),
+        optimizer=OptimizerConfig(kind="sgd", learning_rate=0.05),
+        train_tokens=8)
+
+def preqs(cfg):
+    rs = make_shared_prefix_requests(cfg, 4, PREFIX, PROMPT, GEN, seed=5)
+    for r in rs[::2]:
+        r.user = 7          # repeat user: a train wave fires mid-run, so
+    return rs               # later requests decode through a live delta
+
+cfg = get_smoke_config("llama3-8b")
+cfg = dataclasses.replace(cfg, num_heads=8, num_kv_heads=4)
+params = T.init_params(cfg, jax.random.PRNGKey(0))
+pref = ServeEngine(cfg, params, num_slots=2, max_len=MAXLEN, page_size=PAGE,
+                   num_pages=16, personalization=p13n())
+p1 = pref.run(preqs(cfg))
+assert p1.train_waves > 0, p1.train_waves
+for n in (2, 4):
+    peng = ServeEngine(cfg, params, num_slots=2, max_len=MAXLEN,
+                       page_size=PAGE, num_pages=16,
+                       rules=default_rules(make_serve_mesh(n)),
+                       personalization=p13n())
+    s1 = peng.run(preqs(cfg))
+    ok_par = toks(s1) == toks(p1)
+    ok_wave = s1.train_waves == p1.train_waves
+    ok_trace = peng._step._cache_size() == 2
+    ok = ok_par and ok_wave and ok_trace
+    all_ok = all_ok and ok
+    print("PRESULT", n, int(ok_par), int(ok_wave), int(ok_trace), flush=True)
 print("ALLOK", int(all_ok), flush=True)
 """
 
@@ -261,16 +376,19 @@ SRC = os.path.join(os.path.dirname(os.path.dirname(
 @pytest.mark.slow
 def test_sharded_parity_forced_multidevice():
     """8 forced host CPU devices: 2-/4-way sharded decode token-identical
-    to the single-device engine for every cache family, with page
-    accounting device-layout independent and run-2 prefix hits rehydrating
-    onto the sharded pool."""
+    to the single-device engine for every cache family plus a deepseek-style
+    MoE, with page accounting device-layout independent, run-2 prefix hits
+    rehydrating onto the sharded pool, and a personalized request mix whose
+    train waves and served tokens are mesh-width independent."""
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)
     proc = subprocess.run([sys.executable, "-c", _MULTIDEV_SCRIPT, SRC],
-                          capture_output=True, text=True, timeout=900,
+                          capture_output=True, text=True, timeout=1500,
                           env=env)
     assert proc.returncode == 0, (
         f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}")
     lines = [l for l in proc.stdout.splitlines() if l.startswith("RESULT")]
-    assert len(lines) == 8, proc.stdout       # 4 archs x 2 mesh widths
+    assert len(lines) == 10, proc.stdout      # 5 archs x 2 mesh widths
+    plines = [l for l in proc.stdout.splitlines() if l.startswith("PRESULT")]
+    assert len(plines) == 2, proc.stdout      # personalized mix, n in (2, 4)
     assert "ALLOK 1" in proc.stdout, proc.stdout

@@ -54,6 +54,32 @@ def test_resolve_pspec_divisibility_fallback():
     assert resolve_pspec((10, 7), (None, "nope"), big) == P(None, None)
 
 
+def test_seq_sharded_rules_long_context_decode():
+    """long_500k (batch=1): `seq_sharded_rules` moves the batch axes onto
+    the KV-cache sequence dim, and `rules_for` extends that with the model
+    axis for flash-decoding — 256-way sequence sharding on a full pod."""
+    from repro.configs import ShapeConfig, get_smoke_config
+    from repro.launch.mesh import make_debug_mesh
+    from repro.launch.specs import rules_for
+    from repro.sharding import seq_sharded_rules
+
+    mesh = make_debug_mesh(1, 1)
+    r = seq_sharded_rules(mesh)
+    assert r.rules["batch"] is None            # batch=1: nothing to shard
+    assert tuple(r.rules["cache_seq"] or ()) == tuple(r.batch_axes)
+
+    cfg = get_smoke_config("llama3-8b")
+    long = rules_for(mesh, cfg, ShapeConfig("long_500k", 64, 1, "decode"))
+    assert long.rules["batch"] is None
+    assert long.rules["kv_heads"] is None      # GQA gather stays local
+    assert tuple(long.rules["cache_seq"]) == tuple(r.batch_axes) + ("model",)
+    # every other decode shape keeps batch-parallel defaults: sequence
+    # shards over the model axis only
+    short = rules_for(mesh, cfg, ShapeConfig("decode_32k", 64, 4, "decode"))
+    assert tuple(short.rules["batch"] or ()) == tuple(r.batch_axes)
+    assert tuple(short.rules["cache_seq"]) == ("model",)
+
+
 def test_hlo_collective_parser_synthetic():
     from repro.launch.hlo_analysis import collective_bytes
     hlo = textwrap.dedent("""\
